@@ -1,0 +1,80 @@
+"""Roofline report: reads the dry-run artifacts (experiments/dryrun/*.json)
+and renders the per-(arch x shape x mesh) table for EXPERIMENTS.md.
+
+No compilation happens here — launch/dryrun.py produces the artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(tag: str | None = None):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        parts = name.split("__")
+        if tag is None and len(parts) > 3:
+            continue
+        if tag is not None and (len(parts) < 4 or parts[3] != tag):
+            continue
+        with open(path) as f:
+            cells[tuple(parts[:3])] = json.load(f)
+    return cells
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def render_markdown(cells) -> str:
+    lines = [
+        "| arch | shape | mesh | compute | memory(HLO) | memory(floor) | "
+        "collective | dominant | useful FLOPs | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        if r.get("skipped"):
+            lines.append(f"| {arch} | {shape} | {mesh} | — | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        if r.get("error"):
+            lines.append(f"| {arch} | {shape} | {mesh} | ERROR: "
+                         f"{r['error'][:60]} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        floor = r.get("memory_floor_s")
+        ur = r.get("useful_ratio")
+        peak = r["memory"]["peak_bytes_estimate"] / 1e9
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(floor)} | "
+            f"{fmt_s(rf['collective_s'])} | {rf['dominant']} | "
+            f"{'' if ur is None else f'{ur:.2f}'} | {peak:.1f} |")
+    return "\n".join(lines)
+
+
+def summarize() -> dict:
+    cells = load_cells()
+    n_ok = sum(1 for c in cells.values()
+               if not c.get("error") and not c.get("skipped"))
+    n_skip = sum(1 for c in cells.values() if c.get("skipped"))
+    n_err = sum(1 for c in cells.values() if c.get("error"))
+    return {"cells": len(cells), "compiled": n_ok, "skipped": n_skip,
+            "errors": n_err}
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(render_markdown(cells))
+    print()
+    print(summarize())

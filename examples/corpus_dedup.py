@@ -1,0 +1,35 @@
+"""LM-pipeline integration: suffix-array dedup + contamination search over
+a token corpus (DESIGN.md §3) — the paper's scan engine as training-data
+infrastructure.
+
+    PYTHONPATH=src python examples/corpus_dedup.py
+"""
+import numpy as np
+
+from repro.core import dedup
+from repro.core.tablet import build_tablet_store
+
+rng = np.random.default_rng(0)
+
+# a document pool with planted duplication and eval contamination
+docs = [rng.integers(0, 32000, 400).astype(np.int32) for _ in range(8)]
+docs[5] = docs[1].copy()                     # exact duplicate document
+eval_window = docs[3][100:140].copy()        # eval n-gram leaked into train
+
+tokens = np.concatenate(docs)
+doc_ids = np.repeat(np.arange(len(docs)), 400)
+
+store = build_tablet_store(tokens, is_dna=False, max_query_len=64)
+
+scores = dedup.doc_dup_scores(store, doc_ids, min_len=48)
+keep = dedup.filter_duplicate_docs(store, doc_ids, min_len=48)
+print("per-document duplicated fraction:")
+for i, (s, k) in enumerate(zip(scores, keep)):
+    print(f"  doc {i}: dup={s:.2f} keep={bool(k)}")
+assert not (keep[1] and keep[5]), "one of the duplicate pair must drop"
+
+hits = dedup.contamination_check(store, eval_window[None, :])
+print(f"eval window contaminated: {bool(hits[0])} (expected True)")
+clean = dedup.contamination_check(
+    store, rng.integers(32000, 64000, 40).astype(np.int32)[None, :])
+print(f"random window contaminated: {bool(clean[0])} (expected False)")

@@ -1,0 +1,10 @@
+"""Serving driver: batched scan requests against the tablet store — the
+paper's §V service shape, runnable end-to-end.
+
+    PYTHONPATH=src python examples/serve_queries.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--text-len", "200000", "--queries", "5000",
+                "--batch", "256"])

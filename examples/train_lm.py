@@ -1,0 +1,31 @@
+"""End-to-end training driver: train a reduced-config model for a few
+hundred steps on CPU with checkpoints + auto-resume, through the same
+launcher a pod deployment uses.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-0.6b --steps 200
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+    losses = train_main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "64",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+        "--log-every", "20",
+    ])
+    assert losses[-1] < losses[0], "training must reduce loss"
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Fault-tolerant checkpointing (DESIGN.md §5).
+
+* Atomic: write to ``step_XXXX.tmp`` then ``os.rename`` — a preempted save
+  never corrupts the latest checkpoint.
+* Versioned + keep_n GC; ``latest_step()`` drives auto-resume.
+* Elastic: arrays are saved UNSHARDED (host-gathered) with their spec tree
+  alongside, so a restore may target a different mesh/device-count than the
+  save (tested 1 <-> 8 devices).  On a multi-host deployment this becomes
+  per-host shard files + a reshard-on-load pass; single-process here.
+* Data-iterator state (just the step for our deterministic pipeline) rides
+  in the metadata.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), x) for p, x in flat], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+
+    # -------------------------------------------------------------- save
+    def save(self, step: int, state: Any, extra: Optional[dict] = None):
+        flat, _ = _flatten(state)
+        arrays = {f"a{i}": np.asarray(jax.device_get(x))
+                  for i, (_, x) in enumerate(flat)}
+        meta = {"step": int(step),
+                "paths": [p for p, _ in flat],
+                "extra": extra or {}}
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                    # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ----------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name,
+                                                 "meta.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None):
+        """Restore into the structure of ``like``; optionally device_put
+        with ``shardings`` (tree of NamedSharding) — this is the elastic
+        reshard-on-load path."""
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat, treedef = _flatten(like)
+        saved = {p: data[f"a{i}"] for i, p in enumerate(meta["paths"])}
+        leaves = []
+        for p, x in flat:
+            if p not in saved:
+                raise KeyError(f"checkpoint missing leaf {p}")
+            a = saved[p]
+            if tuple(a.shape) != tuple(x.shape):
+                raise ValueError(f"shape mismatch at {p}: "
+                                 f"{a.shape} vs {x.shape}")
+            leaves.append(a.astype(x.dtype))
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, meta["extra"]
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = self.restore(step, like, shardings)
+        return step, tree, extra

@@ -1,0 +1,70 @@
+"""Corpus dedup & contamination search — the LM-pipeline face of TabletSA.
+
+The operation the paper performs on DNA (exact-substring lookup over a
+sorted suffix store) is exactly what LM data pipelines need for
+(a) exact-duplicate span detection (suffix-array dedup a la Lee et al.),
+(b) eval-set contamination queries, and (c) exact-match retrieval.
+This module wires the core engine into ``repro.data`` (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.suffix_array import adjacent_lcp
+from repro.core.tablet import TabletStore
+
+
+def duplicate_span_mask(store: TabletStore, min_len: int) -> jnp.ndarray:
+    """Boolean mask over text positions: True where a substring of length
+    >= min_len starting there occurs at least twice in the corpus.
+
+    Adjacent rows of the suffix array with LCP >= min_len are exactly the
+    pairs of duplicated spans; both members get marked."""
+    text = store.text_codes
+    sa = store.sa
+    lcp = adjacent_lcp(text, sa, min_len)           # (n_pad-1,)
+    dup = lcp >= min_len                            # pair (i, i+1) duplicated
+    n = store.n_pad
+    mask_sorted = jnp.zeros((n,), bool)
+    mask_sorted = mask_sorted.at[:-1].set(dup)
+    mask_sorted = mask_sorted.at[1:].max(dup)
+    # scatter back to text positions; drop pad rows
+    mask_text = jnp.zeros((n,), bool).at[sa].set(mask_sorted)
+    return mask_text[: store.n_real]
+
+
+def duplicate_fraction(store: TabletStore, min_len: int) -> jnp.ndarray:
+    """Fraction of corpus positions inside >=min_len duplicated spans."""
+    m = duplicate_span_mask(store, min_len)
+    return jnp.mean(m.astype(jnp.float32))
+
+
+def doc_dup_scores(store: TabletStore, doc_ids: np.ndarray,
+                   min_len: int) -> np.ndarray:
+    """Per-document duplicated-position fraction.  ``doc_ids`` maps each
+    text position to its document (int, length n_real)."""
+    mask = np.asarray(duplicate_span_mask(store, min_len))
+    doc_ids = np.asarray(doc_ids)
+    num_docs = int(doc_ids.max()) + 1 if doc_ids.size else 0
+    tot = np.bincount(doc_ids, minlength=num_docs).astype(np.float64)
+    dup = np.bincount(doc_ids, weights=mask.astype(np.float64),
+                      minlength=num_docs)
+    return dup / np.maximum(tot, 1)
+
+
+def filter_duplicate_docs(store: TabletStore, doc_ids: np.ndarray,
+                          min_len: int, threshold: float = 0.5) -> np.ndarray:
+    """Returns the boolean keep-mask over documents (True = keep)."""
+    return doc_dup_scores(store, doc_ids, min_len) < threshold
+
+
+def contamination_check(store: TabletStore, eval_token_windows: np.ndarray
+                        ) -> np.ndarray:
+    """True per eval window if it appears verbatim in the training corpus.
+    ``eval_token_windows``: (B, L) int32 token n-grams."""
+    w = jnp.asarray(eval_token_windows, jnp.int32)
+    plen = jnp.full((w.shape[0],), w.shape[1], jnp.int32)
+    res = Q.query(store, w, plen)
+    return np.asarray(res.found)

@@ -1,0 +1,227 @@
+"""Distributed sorts over a mesh axis (Accumulo-ingest analogue, DESIGN.md §2).
+
+Two algorithms, both running *inside* ``shard_map`` (each device holds an
+equal-length local block):
+
+* ``bitonic_sort_sharded`` — block-bitonic merge network: log2(p)*(log2(p)+1)/2
+  rounds of pairwise ``ppermute`` + local merge-split.  Deterministic, always
+  correct, O(m log^2 p) exchanged bytes.  This is the BASELINE construction
+  path (paper-faithful: Accumulo's LSM merge is also a merge network).
+* ``sample_sort_sharded`` — one splitter round + one ``all_to_all``:
+  O(m) exchanged bytes (~log^2 p fewer than bitonic) but requires a capacity
+  factor because ``all_to_all`` chunks are fixed-size.  Returns an overflow
+  flag; callers fall back to bitonic on overflow.  This is the BEYOND-PAPER
+  optimization measured in EXPERIMENTS.md §Perf.
+
+Keys are int32; values ride along.  Local blocks come back globally sorted
+across the device axis (device d holds global ranks [d*m, (d+1)*m)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def _axis_size(axis_name) -> int:
+    return lax.psum(1, axis_name)
+
+
+def _merge_split(ops_a, ops_b, num_keys: int, keep_low, i_am_lower):
+    """Merge two sorted blocks, keep low or high half (traced ``keep_low``).
+
+    Both partners MUST materialize the identical merged array or tied keys
+    split inconsistently (duplicating/dropping rows).  We therefore order the
+    concatenation canonically: the lower-ranked device's block first.
+    """
+    first = tuple(jnp.where(i_am_lower, a, b) for a, b in zip(ops_a, ops_b))
+    second = tuple(jnp.where(i_am_lower, b, a) for a, b in zip(ops_a, ops_b))
+    cat = tuple(jnp.concatenate([f, s]) for f, s in zip(first, second))
+    merged = lax.sort(cat, dimension=0, num_keys=num_keys, is_stable=True)
+    m = ops_a[0].shape[0]
+    lows = tuple(x[:m] for x in merged)
+    highs = tuple(x[m:] for x in merged)
+    return tuple(jnp.where(keep_low, lo, hi) for lo, hi in zip(lows, highs))
+
+
+def bitonic_sort_sharded(operands, *, num_keys: int, axis_name):
+    """Block-bitonic sort of equal-size local blocks across ``axis_name``.
+
+    ``operands``: tuple of 1-D arrays (first ``num_keys`` are sort keys).
+    Must be called inside shard_map.  p (axis size) must be a power of two.
+    """
+    operands = tuple(operands)
+    p = _axis_size(axis_name)
+    # p is static inside shard_map (mesh shape), so Python control flow is ok.
+    log_p = int(np.log2(p))
+    assert 1 << log_p == p, f"axis size {p} must be a power of two"
+    d = lax.axis_index(axis_name)
+
+    # 1. local sort
+    operands = lax.sort(operands, dimension=0, num_keys=num_keys, is_stable=True)
+    if p == 1:
+        return operands
+
+    # 2. bitonic network on blocks
+    for stage in range(1, log_p + 1):
+        k = 1 << stage  # ascending-run length being built (in blocks)
+        for sub in range(stage - 1, -1, -1):
+            j = 1 << sub
+            perm = [(r, r ^ j) for r in range(p)]
+            partner_ops = tuple(
+                lax.ppermute(x, axis_name, perm) for x in operands
+            )
+            # keep_low iff direction(asc) == (I am the lower index of the pair)
+            i_am_lower = (d & j) == 0
+            keep_low = ((d & k) == 0) == i_am_lower
+            operands = _merge_split(operands, partner_ops, num_keys,
+                                    keep_low, i_am_lower)
+    return operands
+
+
+def sample_sort_sharded(operands, *, num_keys: int, axis_name,
+                        capacity_factor: float = 2.0, oversample: int = 64):
+    """One-shot sample sort: splitter selection + single all_to_all.
+
+    Returns (sorted_operands, overflow: bool scalar).  On overflow the output
+    is NOT a valid sort — callers must fall back (see sort_sharded_auto).
+    Keys must be int32; composite keys are combined by the caller or passed
+    as multiple key operands (only the FIRST key is used for splitting, which
+    is correct because lax.sort finishes the job locally).
+    """
+    operands = tuple(operands)
+    key = operands[0]
+    p = _axis_size(axis_name)
+    m = key.shape[0]
+    d = lax.axis_index(axis_name)
+
+    # --- splitters: regular sampling (PSRS-style), s per device -> p-1 cuts
+    s = min(oversample, m)
+    take = jnp.linspace(0, m - 1, s).astype(jnp.int32)
+    local_sample = jnp.sort(key)[take]
+    samples = lax.all_gather(local_sample, axis_name).reshape(-1)  # (p*s,)
+    samples = jnp.sort(samples)
+    cuts = samples[jnp.arange(1, p, dtype=jnp.int32) * s]          # (p-1,)
+
+    # --- bucket assignment + fixed-capacity layout
+    dest = jnp.searchsorted(cuts, key, side="right").astype(jnp.int32)  # (m,)
+    cap = int(np.ceil(m / p * capacity_factor))
+    # rank of each element within its bucket
+    order = jnp.argsort(dest, stable=True)
+    dest_sorted = dest[order]
+    # position within bucket = index - start_of_bucket
+    bucket_start = jnp.searchsorted(dest_sorted, jnp.arange(p, dtype=jnp.int32),
+                                    side="left")
+    within = jnp.arange(m, dtype=jnp.int32) - bucket_start[dest_sorted]
+    overflow = jnp.any(within >= cap)
+    slot = jnp.clip(within, 0, cap - 1)
+
+    # scatter into (p, cap) send buffers; EMPTY = key sentinel INT32_MAX
+    sentinel = jnp.int32(np.iinfo(np.int32).max)
+
+    def to_buckets(x, fill):
+        buf = jnp.full((p, cap), fill, x.dtype)
+        return buf.at[dest_sorted, slot].set(x[order], mode="drop")
+
+    send = tuple(
+        to_buckets(x, sentinel if i < num_keys else jnp.zeros((), x.dtype))
+        for i, x in enumerate(operands)
+    )
+    recv = tuple(
+        lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=False)
+        for x in send
+    )  # (p, cap) each: rows from every device
+    flat = tuple(x.reshape(-1) for x in recv)  # (p*cap,)
+
+    # --- local sort; sentinels sink to the end
+    flat = lax.sort(flat, dimension=0, num_keys=num_keys, is_stable=True)
+
+    # --- re-balance to exactly m per device.  Data is now globally sorted but
+    # ragged; element with global rank g belongs on device g // m.  Because
+    # the distribution is sorted, owners are contiguous and (for good
+    # splitters) near-diagonal: spill goes only to immediate neighbours via
+    # two ppermutes of a fixed spill window H (no second all_to_all).
+    # Spill window: bounded by the splitter-induced offset error, which for
+    # regular sampling with s samples/device is O(m/s) per device, O(p*m/s)
+    # cumulative in the worst case; size generously and keep the flag.
+    H = min(p * cap, cap + max(1, m // 4))
+    n_real_local = jnp.sum((flat[0] != sentinel).astype(jnp.int32))
+    counts = lax.all_gather(n_real_local, axis_name)               # (p,)
+    my_offset = jnp.sum(jnp.where(jnp.arange(p) < d, counts, 0))
+    gidx = my_offset + jnp.arange(p * cap, dtype=jnp.int32)        # global rank
+    valid = flat[0] != sentinel
+    grank = jnp.where(valid, gidx, -1)
+    owner = jnp.where(valid, gidx // m, -1)
+    # anything spilling beyond immediate neighbours => splitters too bad
+    overflow = overflow | jnp.any(valid & (jnp.abs(owner - d) > 1))
+    flat = flat + (grank,)
+
+    lo, hi = d * m, (d + 1) * m
+
+    def spill(direction):
+        """Fixed-H buffer of rows destined to neighbour d+direction."""
+        if direction < 0:
+            sel = valid & (gidx < lo)
+            slot_ = gidx - my_offset                 # first n_left rows
+        else:
+            sel = valid & (gidx >= hi)
+            slot_ = gidx - hi                        # rank within right spill
+        slot_ = jnp.where(sel, slot_, p * cap)
+        nonlocal overflow
+        overflow = overflow | jnp.any(sel & (slot_ >= H))
+        bufs = []
+        for x in flat:
+            fill = jnp.array(sentinel if x.dtype == jnp.int32 else 0, x.dtype)
+            buf = jnp.full((H,), -1 if x is flat[-1] else fill, x.dtype)
+            bufs.append(buf.at[slot_].set(jnp.where(sel, x, buf[0]), mode="drop"))
+        return tuple(bufs)
+
+    left_spill = spill(-1)   # rows whose owner is d-1 (or worse -> flagged)
+    right_spill = spill(+1)
+    perm_r = [(r, (r + 1) % p) for r in range(p)]   # send to right neighbour
+    perm_l = [(r, (r - 1) % p) for r in range(p)]   # send to left neighbour
+    from_left = tuple(lax.ppermute(x, axis_name, perm_r) for x in right_spill)
+    from_right = tuple(lax.ppermute(x, axis_name, perm_l) for x in left_spill)
+
+    out = []
+    for i, x in enumerate(flat[:-1]):
+        buf = jnp.zeros((m,), x.dtype)
+        g_mine = flat[-1]
+        buf = buf.at[jnp.where((g_mine >= lo) & (g_mine < hi), g_mine - lo, m)
+                     ].set(x, mode="drop")
+        g_l = from_left[-1]
+        buf = buf.at[jnp.where((g_l >= lo) & (g_l < hi), g_l - lo, m)
+                     ].set(from_left[i], mode="drop")
+        g_r = from_right[-1]
+        buf = buf.at[jnp.where((g_r >= lo) & (g_r < hi), g_r - lo, m)
+                     ].set(from_right[i], mode="drop")
+        out.append(buf)
+
+    overflow = lax.psum(overflow.astype(jnp.int32), axis_name) > 0
+    return tuple(out), overflow
+
+
+def sort_sharded_auto(operands, *, num_keys: int, axis_name,
+                      capacity_factor: float = 2.0, oversample: int = 64):
+    """Sample sort with a bitonic fallback when splitters overflow capacity.
+
+    The overflow flag is psum-reduced, hence uniform across devices, so the
+    ``lax.cond`` branch choice is consistent and the collectives inside both
+    branches stay SPMD-coherent.  Fast path: O(m) bytes on the wire; fallback:
+    O(m log^2 p).  Dup-heavy keys (early prefix-doubling rounds) take the
+    fallback; near-unique keys (late rounds, scatter-by-position) stay fast.
+    """
+    operands = tuple(operands)
+    fast, overflow = sample_sort_sharded(
+        operands, num_keys=num_keys, axis_name=axis_name,
+        capacity_factor=capacity_factor, oversample=oversample)
+
+    def use_fast(_):
+        return fast
+
+    def use_bitonic(_):
+        return bitonic_sort_sharded(operands, num_keys=num_keys,
+                                    axis_name=axis_name)
+
+    return lax.cond(overflow, use_bitonic, use_fast, None)

@@ -1,0 +1,118 @@
+"""Suffix-array construction (paper §III, Algorithm 2).
+
+Three implementations, increasing in scale:
+
+* ``suffix_array_naive``  — python ``sorted`` oracle, O(n^2 log n).  Test-only.
+* ``build_suffix_array``  — Manber–Myers prefix doubling in pure JAX:
+  ceil(log2 n) rounds, each a stable 2-key sort + rank relabel.  This is the
+  TPU-native choice (data-parallel sorts; DC3's recursion is SPMD-hostile) —
+  DESIGN.md §2.
+* ``build_suffix_array_sharded`` — the same doubling loop with the sort
+  replaced by a distributed bitonic merge over the mesh (see ``dsort.py``),
+  so each device holds only n/p rows — the Accumulo-tablet analogue for
+  *construction* (paper §IV pre-processing phase).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Oracle
+# --------------------------------------------------------------------------
+def suffix_array_naive(codes: np.ndarray) -> np.ndarray:
+    """Reference: sort suffix start positions lexicographically."""
+    codes = np.asarray(codes)
+    n = len(codes)
+    buf = codes.tobytes() if codes.dtype == np.uint8 else codes.astype(">u4").tobytes()
+    item = codes.dtype.itemsize if codes.dtype == np.uint8 else 4
+    return np.array(
+        sorted(range(n), key=lambda i: buf[i * item:]), dtype=np.int32
+    )
+
+
+# --------------------------------------------------------------------------
+# Prefix doubling (single device)
+# --------------------------------------------------------------------------
+def _relabel(rank_sorted_1, rank_sorted_2, sa):
+    """Given sort keys in sorted order, assign dense new ranks (ties share)."""
+    changed = (rank_sorted_1[1:] != rank_sorted_1[:-1]) | (
+        rank_sorted_2[1:] != rank_sorted_2[:-1]
+    )
+    new_rank_sorted = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(changed.astype(jnp.int32))]
+    )
+    # Scatter back to text order.
+    n = sa.shape[0]
+    rank = jnp.zeros((n,), jnp.int32).at[sa].set(new_rank_sorted)
+    return rank
+
+
+def _doubling_step(carry, _, *, n):
+    rank, k, _ = carry
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # rank of the suffix k positions later; -1 (less than everything) past end.
+    nxt = jnp.where(idx + k < n, jnp.take(rank, (idx + k) % n), -1).astype(jnp.int32)
+    # Stable lexicographic sort by (rank, nxt); carry positions along.
+    rank_s, nxt_s, sa = jax.lax.sort((rank, nxt, idx), dimension=0, num_keys=2)
+    rank = _relabel(rank_s, nxt_s, sa)
+    return (rank, k * 2, sa), None
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps",))
+def _build_jit(codes: jnp.ndarray, num_steps: int):
+    n = codes.shape[0]
+    # Initial ranks = codes (already ordinal; generic token dtypes welcome).
+    rank = codes.astype(jnp.int32)
+    # Densify initial ranks so they are < n (needed only for clean relabel).
+    idx = jnp.arange(n, dtype=jnp.int32)
+    r_s, i_s = jax.lax.sort((rank, idx), dimension=0, num_keys=1)
+    rank = _relabel(r_s, r_s, i_s)
+    (rank, _, sa), _ = jax.lax.scan(
+        functools.partial(_doubling_step, n=n),
+        (rank, jnp.int32(1), idx),
+        None, length=num_steps,
+    )
+    return sa, rank
+
+
+def build_suffix_array(codes) -> jnp.ndarray:
+    """Suffix array of ``codes`` (any integer dtype), int32 positions."""
+    codes = jnp.asarray(codes)
+    n = int(codes.shape[0])
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if n == 1:
+        return jnp.zeros((1,), jnp.int32)
+    num_steps = max(1, int(np.ceil(np.log2(n))))
+    sa, _ = _build_jit(codes, num_steps)
+    return sa
+
+
+def rank_array(sa: jnp.ndarray) -> jnp.ndarray:
+    """Inverse permutation: rank[pos] = index of suffix pos in the SA."""
+    n = sa.shape[0]
+    return jnp.zeros((n,), jnp.int32).at[sa].set(jnp.arange(n, dtype=jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# LCP of adjacent SA rows (blocked compare, depth-capped) — used by dedup.
+# --------------------------------------------------------------------------
+def adjacent_lcp(codes: jnp.ndarray, sa: jnp.ndarray, max_lcp: int) -> jnp.ndarray:
+    """lcp[i] = longest common prefix (capped at max_lcp) of suffixes
+    sa[i] and sa[i+1]; shape (n-1,).  O(n * max_lcp) vectorized compare —
+    Kasai's O(n) is inherently sequential, this is the SPMD formulation."""
+    n = codes.shape[0]
+    a, b = sa[:-1], sa[1:]
+    offs = jnp.arange(max_lcp, dtype=jnp.int32)
+    ia = a[:, None] + offs[None, :]
+    ib = b[:, None] + offs[None, :]
+    va = jnp.where(ia < n, jnp.take(codes, jnp.clip(ia, 0, n - 1)), -1)
+    vb = jnp.where(ib < n, jnp.take(codes, jnp.clip(ib, 0, n - 1)), -2)
+    eq = va == vb
+    # Length of the leading run of True.
+    return jnp.sum(jnp.cumprod(eq.astype(jnp.int32), axis=1), axis=1)

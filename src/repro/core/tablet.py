@@ -1,0 +1,94 @@
+"""TabletStore — the Accumulo table of paper §IV, adapted to a TPU mesh.
+
+Paper layout: one row per suffix (ROWID = start position, TEXT = suffix
+chars, truncated to 1000).  Our layout (DESIGN.md §2): the text is stored
+ONCE (2-bit packed for DNA, raw int32 codes for token corpora) and the
+"table" is the globally sorted suffix array, range-partitioned into
+contiguous tablets of m = n_pad / p rows, one per device.  Split keys
+(Accumulo's METADATA table) are implicit: tablet d owns sorted rows
+[d*m, (d+1)*m).
+
+``max_query_len`` is the paper's 1000-char truncation, reborn as a compare
+depth cap (queries in the paper's workload are <= 100 chars).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec
+from repro.core.suffix_array import build_suffix_array
+from repro.core.dsa import build_suffix_array_distributed
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("text_packed", "text_codes", "sa"),
+         meta_fields=("n_real", "n_pad", "is_dna", "max_query_len"))
+@dataclasses.dataclass(frozen=True)
+class TabletStore:
+    """One suffix-array "table".  ``sa`` is the padded, globally sorted
+    suffix array; pad rows (positions >= n_real) sort first and are inert
+    for every query whose codes are >= 0."""
+    text_packed: Optional[jnp.ndarray]  # (n_words,) uint32 | None
+    text_codes: Optional[jnp.ndarray]   # (n_pad,)  int32  | None
+    sa: jnp.ndarray                     # (n_pad,)  int32
+    n_real: int
+    n_pad: int
+    is_dna: bool
+    max_query_len: int
+
+    @property
+    def pad_count(self) -> int:
+        return self.n_pad - self.n_real
+
+    def tablet_rows(self, num_tablets: int) -> int:
+        assert self.n_pad % num_tablets == 0
+        return self.n_pad // num_tablets
+
+
+def build_tablet_store(codes, *, is_dna: bool | None = None,
+                       max_query_len: int = 128,
+                       num_tablets: int = 1,
+                       mesh=None, axis_name: str | None = None,
+                       method: str = "bitonic") -> TabletStore:
+    """Build the store.  Single-device when mesh is None, otherwise the
+    distributed builder (paper's pre-processing phase on the cluster)."""
+    codes = np.asarray(codes)
+    n_real = int(codes.shape[0])
+    if is_dna is None:
+        is_dna = codes.size > 0 and codes.max() < 4
+
+    if mesh is None:
+        p = num_tablets
+        m = int(np.ceil(max(n_real, 1) / p))
+        n_pad = m * p
+        sa_real = build_suffix_array(codes.astype(np.int32))
+        # pad rows (positions n_real..n_pad-1) sort before all real rows,
+        # longest-run-of-pads first => ascending position order n_real..n_pad-1
+        # is exactly DEscending pad-run length; order among pads never affects
+        # queries, but keep the canonical order the distributed builder makes:
+        # pad suffix at position q is a run of (n_pad - q) minimal symbols and
+        # shorter runs are prefixes => sort ascending by run length, i.e.
+        # positions n_pad-1, n_pad-2, ..., n_real.
+        pads = np.arange(n_pad - 1, n_real - 1, -1, dtype=np.int32)
+        sa = jnp.asarray(np.concatenate([pads, np.asarray(sa_real)]))
+    else:
+        assert axis_name is not None
+        sa, _pad = build_suffix_array_distributed(codes, mesh, axis_name,
+                                                  method=method)
+        n_pad = int(sa.shape[0])
+
+    text_packed = codec.pack_2bit(codes) if is_dna else None
+    # generic code array padded with -1 so out-of-range gathers sort low
+    text_codes = jnp.asarray(
+        np.pad(codes.astype(np.int32), (0, n_pad - n_real),
+               constant_values=-1))
+    return TabletStore(text_packed=text_packed, text_codes=text_codes,
+                       sa=jnp.asarray(sa, jnp.int32), n_real=n_real,
+                       n_pad=n_pad, is_dna=bool(is_dna),
+                       max_query_len=max_query_len)

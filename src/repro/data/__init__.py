@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, dna_corpus, make_batch_iter,
+                                 synthetic_batch)
+
+__all__ = ["DataConfig", "dna_corpus", "make_batch_iter", "synthetic_batch"]

@@ -1,0 +1,76 @@
+"""Gradient compression for cross-pod reduction (DESIGN.md §5).
+
+int8 block-quantized gradient exchange with error feedback: the pod-
+crossing hop is the slow link (DCN vs ICI), so gradients are quantized to
+int8 with a per-block fp32 scale and exchanged via ``all_gather`` (int8 on
+the wire — visible as an s8 collective in the dry-run HLO, which is how the
+roofline parser credits the 4x byte saving), then dequantized and averaged
+locally.  The quantization residual is carried in an error-feedback buffer
+so the bias vanishes over steps (Karimireddy et al. 2019); tests verify
+convergence parity.
+
+Used by the explicit-DP trainer (shard_map over 'pod'); inside plain GSPMD
+jit the collective is compiler-inserted and can't be intercepted, which is
+why the pod-axis trainer is shard_map'd.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+BLOCK = 256
+
+
+def _quantize(x):
+    """fp32 (n,) -> (int8 blocks (nb, BLOCK), scales (nb,), pad)."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    xb = jnp.pad(x, (0, pad)).reshape(-1, BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(xb / jnp.maximum(scale, 1e-20)), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale[:, 0], pad
+
+
+def compressed_pmean(x: jnp.ndarray, axis_name, err: jnp.ndarray):
+    """Mean-reduce ``x`` over ``axis_name``: int8 payload on the wire.
+    Returns (mean, new_err).  ``err`` matches x's shape (error feedback)."""
+    shape = x.shape
+    flat = (x.astype(jnp.float32) + err.astype(jnp.float32)).reshape(-1)
+    n = flat.shape[0]
+    q, scale, pad = _quantize(flat)
+    sent = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    new_err = (flat - sent).reshape(shape)
+
+    q_all = lax.all_gather(q, axis_name)              # (p, nb, BLOCK) int8
+    s_all = lax.all_gather(scale, axis_name)          # (p, nb) fp32
+    p = q_all.shape[0]
+    deq = jnp.sum(q_all.astype(jnp.float32) * s_all[..., None], axis=0) / p
+    mean = deq.reshape(-1)[:n].reshape(shape)
+    return mean.astype(x.dtype), new_err.astype(x.dtype)
+
+
+def compressed_pmean_tree(tree, axis_name, err_tree):
+    outs = jax.tree.map(
+        lambda x, e: compressed_pmean(x, axis_name, e), tree, err_tree)
+    mean = jax.tree.map(lambda o: o[0], outs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda o: o[1], outs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return mean, err
+
+
+def zeros_like_tree(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), tree)
+
+
+def wire_bytes(tree) -> int:
+    """Bytes on the slow link per exchange: int8 payload + fp32 scales."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        n = int(np.prod(x.shape))
+        total += n + 4 * ((n + BLOCK - 1) // BLOCK)
+    return total

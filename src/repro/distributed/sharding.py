@@ -1,0 +1,244 @@
+"""Sharding rules: logical names -> PartitionSpec for params/activations.
+
+Strategy (DESIGN.md §5): 2-D FSDP x TP.
+  * `model` axis: TP — attention heads, FFN hidden, experts (EP), vocab.
+  * `data`  axis (+ `pod` when present): DP for the batch, FSDP for the
+    non-TP dim of every large weight, ZeRO-1 for optimizer state (it
+    inherits the param specs).
+Param specs come from an explicit name-based table (the last path segment
+plus enclosing module), applied to the trailing dims — stacked (scanned)
+tensors carry a leading n_periods dim that is never sharded.  Activations
+are constrained via the ``shard`` callback.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh):
+    """All DP-capable axes present in the mesh ('pod' folds into data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# Role tables: trailing-dims spec templates.  'M' = model axis, 'D' = data
+# (FSDP) axes, None = replicated.  Matched on (enclosing, leaf-name).
+_RULES: list[tuple[str, str, tuple]] = [
+    # (enclosing-regex, leaf-regex, trailing spec)
+    (r"moe", r"^(wi|wg|wo)$",      ("M", "D", None)),   # (E, d, f)/(E, f, d)
+    (r"moe", r"^router$",          (None, None)),
+    (r"shared", r"^(wi|wg)$",      ("D", "M")),         # (d, f)
+    (r"shared", r"^wo$",           ("M", "D")),         # (f, d)
+    (r"(attn|mtp)", r"^(wq|wk|wv)$", ("D", "M", None)), # (d, H, dh)
+    (r"(attn|mtp)", r"^(wq_b|wk_b|wv_b)$", ("D", "M", None)),  # (r, H, dh)
+    (r"(attn|mtp)", r"^(wq_a|wkv_a)$",     ("D", "M")),        # (d, r)
+    (r"(attn|mtp)", r"^wo$",       ("M", None, "D")),   # (H, dh, d)
+    (r"(attn|mtp)", r"^(bq|bk|bv)$", ("M", None)),      # (H, dh)
+    (r"ssm", r"^in_proj$",         ("D", "M")),         # (d, 2di+2N+H)
+    (r"ssm", r"^out_proj$",        ("M", "D")),         # (di, d)
+    (r"", r"^(wi|wg)$",            ("D", "M")),         # dense mlp
+    (r"", r"^wo$",                 ("M", "D")),
+    (r"", r"^embed$",              ("M", "D")),         # (V, d)
+    (r"", r"^unembed$",            ("D", "M")),         # (d, V)
+    (r"", r"^proj$",               ("D", "M")),         # mtp proj (2d, d)
+]
+
+
+def _leaf_name(path: str) -> tuple[str, str]:
+    keys = re.findall(r"\['([^']+)'\]", path)
+    leaf = keys[-1] if keys else path
+    enclosing = "/".join(keys[:-1])
+    return enclosing, leaf
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh,
+               fsdp: bool = True) -> P:
+    d_axes = data_axes(mesh) if fsdp else ()
+    model_size = mesh.shape.get("model", 1)
+    d_size = int(np.prod([mesh.shape[a] for a in d_axes])) if d_axes else 1
+    enclosing, leaf = _leaf_name(path)
+
+    for enc_re, leaf_re, template in _RULES:
+        if re.search(enc_re, enclosing) and re.match(leaf_re, leaf):
+            n_tail = len(template)
+            if len(shape) < n_tail:
+                return P()
+            lead = len(shape) - n_tail
+            spec: list = [None] * len(shape)
+            for i, role in enumerate(template):
+                dim = lead + i
+                if role == "M" and shape[dim] % model_size == 0 \
+                        and shape[dim] >= model_size:
+                    spec[dim] = "model"
+                elif role == "D" and d_axes and shape[dim] % d_size == 0 \
+                        and shape[dim] >= d_size:
+                    spec[dim] = d_axes
+            return P(*spec)
+    return P()          # norms, biases, scalars: replicated
+
+
+def param_specs(params, mesh: Mesh, fsdp: bool = True):
+    """Tree of PartitionSpecs matching ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        specs.append(param_spec(pstr, leaf.shape, mesh, fsdp))
+    return jax.tree.unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_shard_fn(mesh: Mesh, seq_shard: bool = False):
+    """Activation constraint callback for model code.
+
+    Logical names:
+      act       (B, S, d)  batch over data axes (+ optionally seq/model)
+      tokens2d  (T, d)     flat tokens over data axes
+      moe_ecd   (E, C, *)  experts over model (EP), capacity over data
+    """
+    d_axes = data_axes(mesh)
+    d_size = max(int(np.prod([mesh.shape[a] for a in d_axes])), 1)
+    m_size = mesh.shape.get("model", 1)
+
+    def shard(x, name):
+        spec = [None] * x.ndim
+        if name == "act" and x.ndim >= 2:
+            if x.shape[0] % d_size == 0 and x.shape[0] >= d_size:
+                spec[0] = d_axes
+            if seq_shard and x.ndim >= 3 and x.shape[1] % m_size == 0:
+                spec[1] = "model"
+        elif name == "tokens2d" and x.ndim == 2:
+            if x.shape[0] % d_size == 0 and x.shape[0] >= d_size:
+                spec[0] = d_axes
+        elif name == "moe_ecd" and x.ndim == 3:
+            if x.shape[0] % m_size == 0 and x.shape[0] >= m_size:
+                spec[0] = "model"
+            if x.shape[1] % d_size == 0 and x.shape[1] >= d_size:
+                spec[1] = d_axes
+        elif name == "ssd_h2" and x.ndim >= 3:
+            # (b, nc, h, ...): batch over data, SSD heads over model
+            if x.shape[0] % d_size == 0 and x.shape[0] >= d_size:
+                spec[0] = d_axes
+            if x.shape[2] % m_size == 0 and x.shape[2] >= m_size:
+                spec[2] = "model"
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+    return shard
+
+
+def batch_spec_tree(batch, mesh: Mesh):
+    """Input batch: shard leading (batch) dim over all data axes when it
+    divides; otherwise replicate (long_500k has batch 1)."""
+    d_axes = data_axes(mesh)
+    d_size = int(np.prod([mesh.shape[a] for a in d_axes])) if d_axes else 1
+
+    def spec_for(v):
+        nd = len(v.shape)
+        if v.shape[0] % d_size == 0 and v.shape[0] >= d_size:
+            return P(d_axes, *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree.map(spec_for, batch)
+
+
+def opt_state_specs(opt_cfg, params, pspecs):
+    """ZeRO-1: optimizer moments inherit the param spec.  AdamW m/v mirror
+    params exactly; Adafactor's factored stats drop the reduced dim."""
+    if opt_cfg.kind == "adamw":
+        return {"m": pspecs, "v": pspecs}
+
+    def one(p, spec):
+        parts = list(spec)
+        parts += [None] * (p.ndim - len(parts))
+        st = {}
+        if p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1:
+            st["vr"] = P(*parts[:-1])
+            st["vc"] = P(*(parts[:-2] + parts[-1:]))
+        else:
+            st["v"] = P(*parts)
+        if opt_cfg.b1 > 0:
+            st["m"] = P(*parts)
+        return st
+
+    return jax.tree.map(one, params, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(caches, mesh: Mesh, batch_size: int):
+    """PartitionSpecs for decode caches.  Batch shards over data axes when
+    divisible; otherwise the (long) cache sequence dim takes the data axes
+    (long_500k: batch=1, 512k-token KV).  Heads/channels shard over model
+    when divisible.  Cache layouts (see models/transformer.py):
+      k/v     (B, S, KV, dh)   [+ leading n_periods when stacked]
+      ckv     (B, S, r) ; krope (B, S, dr)
+      ssm     (B, H, P, N) ; conv (B, K-1, ch) ; length scalars/vectors
+    """
+    d_axes = data_axes(mesh)
+    d_size = int(np.prod([mesh.shape[a] for a in d_axes])) if d_axes else 1
+    m_size = mesh.shape.get("model", 1)
+    batch_ok = batch_size % d_size == 0 and batch_size >= d_size
+
+    def spec_for(path: str, leaf) -> P:
+        _, name = _leaf_name(path)
+        nd = leaf.ndim
+        if name == "length" or nd == 0:
+            return P()
+        base: dict[int, Any] = {}
+        if name in ("k", "v"):
+            lead = nd - 4
+            seq_axes = []
+            if batch_ok:
+                base[lead + 0] = d_axes
+            else:
+                seq_axes.extend(d_axes)
+            if leaf.shape[lead + 2] % m_size == 0 \
+                    and leaf.shape[lead + 2] >= m_size:
+                base[lead + 2] = "model"       # TP over KV heads
+            else:
+                seq_axes.append("model")       # fall back: shard cache seq
+            seq_sz = int(np.prod([mesh.shape[a] for a in seq_axes])) \
+                if seq_axes else 1
+            if seq_axes and leaf.shape[lead + 1] % seq_sz == 0 \
+                    and leaf.shape[lead + 1] >= seq_sz:
+                base[lead + 1] = tuple(seq_axes)
+        elif name in ("ckv", "krope"):
+            lead = nd - 3
+            seq_axes = ["model"]               # latent has no head dim
+            if batch_ok:
+                base[lead + 0] = d_axes
+            else:
+                seq_axes = list(d_axes) + seq_axes
+            seq_sz = int(np.prod([mesh.shape[a] for a in seq_axes]))
+            if leaf.shape[lead + 1] % seq_sz == 0 \
+                    and leaf.shape[lead + 1] >= seq_sz:
+                base[lead + 1] = tuple(seq_axes)
+        elif name == "ssm":
+            lead = nd - 4
+            if batch_ok:
+                base[lead + 0] = d_axes
+            if leaf.shape[lead + 1] % m_size == 0:
+                base[lead + 1] = "model"
+        elif name == "conv":
+            lead = nd - 3
+            if batch_ok:
+                base[lead + 0] = d_axes
+            if leaf.shape[lead + 2] % m_size == 0:
+                base[lead + 2] = "model"
+        spec = [base.get(i) for i in range(nd)]
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    specs = [spec_for(jax.tree_util.keystr(p), x) for p, x in flat]
+    return jax.tree.unflatten(treedef, specs)

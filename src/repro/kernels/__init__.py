@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the scan-path hot spots the paper optimizes:
+
+  pack2bit      — 2-bit DNA ingest packing (paper §IV pre-processing)
+  pattern_scan  — masked packed suffix-vs-pattern compare (one search round)
+  tablet_scan   — blocked range-scan: BQ patterns x BR sorted rows in VMEM
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), validated in
+interpret mode against ref.py oracles across shape/dtype sweeps
+(tests/test_kernels.py); ops.py holds the jit'd public wrappers."""
+from repro.kernels import ops, ref
+from repro.kernels.ops import pack2bit, pattern_compare, tablet_scan
+
+__all__ = ["ops", "pack2bit", "pattern_compare", "ref", "tablet_scan"]

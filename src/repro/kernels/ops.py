@@ -1,0 +1,69 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute via ``interpret=True``; on TPU
+they compile to Mosaic.  Wrappers handle padding to kernel block multiples
+and layout transposition so callers keep natural (B, W) shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec
+from repro.kernels import pack2bit as _pk
+from repro.kernels import pattern_scan as _ps
+from repro.kernels import tablet_scan as _ts
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis, fill=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill), n
+
+
+def pack2bit(codes) -> jnp.ndarray:
+    """uint8 codes {0..3} -> packed uint32 words (kernel-backed)."""
+    codes = jnp.asarray(codes)
+    n = codes.shape[0]
+    n_words = codec.packed_length(n)
+    n_words_pad = int(np.ceil(n_words / _pk.BLOCK_WORDS)) * _pk.BLOCK_WORDS
+    flat = jnp.zeros((n_words_pad * 16,), jnp.uint32).at[:n].set(
+        codes.astype(jnp.uint32))
+    lanes = flat.reshape(n_words_pad, 16).T          # slot-major (16, words)
+    packed = _pk.pack2bit_pallas(lanes, interpret=_interpret())
+    return packed[:n_words]
+
+
+def pattern_compare(windows, patterns, plen, pos, *, n_real: int):
+    """(B, W) windows/patterns, (B,) plen/pos -> (lt, le, eq) bool (B,)."""
+    wt, B = _pad_to(windows.T.astype(jnp.uint32), _ps.BLOCK_B, 1)
+    pt, _ = _pad_to(patterns.T.astype(jnp.uint32), _ps.BLOCK_B, 1)
+    pl_, _ = _pad_to(plen.astype(jnp.int32), _ps.BLOCK_B, 0)
+    po_, _ = _pad_to(pos.astype(jnp.int32), _ps.BLOCK_B, 0)
+    lt, le, eq = _ps.pattern_compare_pallas(
+        wt, pt, pl_, po_, n_real=n_real, interpret=_interpret())
+    return (lt[:B].astype(bool), le[:B].astype(bool), eq[:B].astype(bool))
+
+
+def tablet_scan(patterns, plen, windows, pos, *, n_real: int):
+    """Linear scan of BR sorted-row windows by BQ patterns.
+    patterns (BQ, W), plen (BQ,), windows (BR, W), pos (BR,).
+    Returns (count, less, first_row) int32 (BQ,); first_row == 2**30 when
+    no match.  Row padding uses pos=n_real & window=~0 so padded rows never
+    match and never count as 'less'."""
+    pt, BQ = _pad_to(patterns.T.astype(jnp.uint32), _ts.BLOCK_Q, 1)
+    pl_, _ = _pad_to(plen.astype(jnp.int32), _ts.BLOCK_Q, 0, fill=1)
+    wt, BR = _pad_to(windows.T.astype(jnp.uint32), _ts.BLOCK_R, 1)
+    po_, _ = _pad_to(pos.astype(jnp.int32), _ts.BLOCK_R, 0, fill=n_real)
+    count, less, first = _ts.tablet_scan_pallas(
+        pt, pl_, wt, po_, n_real=n_real, n_rows=BR, interpret=_interpret())
+    return count[:BQ], less[:BQ], first[:BQ]

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: 2-bit DNA packing (ingest hot-spot, paper §IV).
+
+Layout: the caller reshapes the code stream to (16, n_words) — 16 sublanes
+(one per base slot of a word) x n_words lanes — so the shift/OR reduction
+runs along the sublane axis and every lane op is 128-aligned.  Packing is
+big-endian within the word (codec.pack_2bit convention): base s sits at
+bit 30-2s, so an unsigned word compare is a 16-base lexicographic compare.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 16          # bases per 32-bit word (sublane dim)
+BLOCK_WORDS = 1024  # words per grid step (lane dim, 128-aligned)
+
+
+def _pack_kernel(codes_ref, out_ref):
+    c = codes_ref[...].astype(jnp.uint32)                    # (16, BW)
+    s = jax.lax.broadcasted_iota(jnp.uint32, c.shape, 0)     # sublane index
+    shifted = c << (30 - 2 * s)
+    # bits are disjoint per sublane -> OR == sum; sum lowers everywhere
+    out_ref[...] = jnp.sum(shifted, axis=0, dtype=jnp.uint32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack2bit_pallas(codes_lanes: jnp.ndarray, *, interpret: bool = False):
+    """codes_lanes: (16, n_words) uint8/uint32 codes in {0..3} (slot-major).
+    Returns (n_words,) uint32 packed words."""
+    lanes, n_words = codes_lanes.shape
+    assert lanes == LANES
+    assert n_words % BLOCK_WORDS == 0, "caller pads to BLOCK_WORDS"
+    grid = (n_words // BLOCK_WORDS,)
+    out = pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((LANES, BLOCK_WORDS), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, BLOCK_WORDS), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_words), jnp.uint32),
+        interpret=interpret,
+    )(codes_lanes.astype(jnp.uint32))
+    return out[0]

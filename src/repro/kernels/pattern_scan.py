@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: masked packed suffix-vs-pattern compare (query hot-spot).
+
+One binary-search round compares B suffix windows against B patterns at
+per-query depth.  Layout is word-major: (W, B) — W (<=8) packed words on the
+sublane axis, queries on the 128-aligned lane axis.  The first-difference
+scan over words is an unrolled W-loop carrying a prefix-equality mask —
+the idiom the VPU wants instead of a horizontal cumprod.
+
+Outputs: lt  (suffix < pattern at depth plen)  — drives lower_bound;
+         le  (lt | prefix-equal)                — drives upper_bound;
+         eq  (suffix starts with pattern)       — match flag.
+Truncation at the text boundary (suffix shorter than pattern) is folded in
+exactly as core.query.compare_packed does.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 512  # queries per grid step (lane axis)
+
+
+def _compare_kernel(win_ref, patt_ref, plen_ref, pos_ref,
+                    lt_ref, le_ref, eq_ref, *, n_real: int, n_words: int):
+    plen = plen_ref[...].astype(jnp.int32)          # (1, B)
+    pos = pos_ref[...].astype(jnp.int32)            # (1, B)
+    shape = plen.shape
+
+    pe = jnp.ones(shape, jnp.bool_)                 # prefix equal so far
+    lt = jnp.zeros(shape, jnp.bool_)
+    for w in range(n_words):
+        a = win_ref[w, :][None, :]                  # suffix word   (1, B)
+        b = patt_ref[w, :][None, :]                 # pattern word  (1, B)
+        r = jnp.clip(plen - w * 16, 0, 16).astype(jnp.uint32)
+        full = jnp.uint32(0xFFFFFFFF)
+        mask = jnp.where(r == 0, jnp.uint32(0),
+                         jnp.where(r == 16, full,
+                                   ~((jnp.uint32(1) << (32 - 2 * r)) - 1)))
+        am = a & mask
+        bm = b & mask
+        lt = lt | (pe & (am < bm))
+        pe = pe & (am == bm)
+    truncated = pos + plen > n_real
+    eq = pe & ~truncated
+    lt = lt | (pe & truncated)
+    lt_ref[...] = lt.astype(jnp.int8)
+    le_ref[...] = (lt | eq).astype(jnp.int8)
+    eq_ref[...] = eq.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("n_real", "interpret"))
+def pattern_compare_pallas(windows_t: jnp.ndarray, patterns_t: jnp.ndarray,
+                           plen: jnp.ndarray, pos: jnp.ndarray,
+                           *, n_real: int, interpret: bool = False):
+    """windows_t/patterns_t: (W, B) uint32; plen/pos: (B,) int32.
+    B must be a multiple of BLOCK_B (caller pads).  Returns (lt, le, eq)
+    int8 (B,)."""
+    W, B = windows_t.shape
+    assert patterns_t.shape == (W, B)
+    assert B % BLOCK_B == 0
+    grid = (B // BLOCK_B,)
+    kernel = functools.partial(_compare_kernel, n_real=n_real, n_words=W)
+    out_shape = [jax.ShapeDtypeStruct((1, B), jnp.int8)] * 3
+    vec_spec = pl.BlockSpec((1, BLOCK_B), lambda i: (0, i))
+    lt, le, eq = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((W, BLOCK_B), lambda i: (0, i)),
+            pl.BlockSpec((W, BLOCK_B), lambda i: (0, i)),
+            vec_spec, vec_spec,
+        ],
+        out_specs=[vec_spec] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(windows_t, patterns_t, plen[None, :], pos[None, :])
+    return lt[0], le[0], eq[0]

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: blocked tablet range-scan (Accumulo seek+scan, §IV).
+
+Compares a block of BQ patterns against a block of BR consecutive sorted
+suffix rows in VMEM and accumulates, per pattern:
+  count      — number of matching rows (occurrences),
+  less       — rows strictly lexicographically before the pattern
+               (summed over all row blocks this equals the lower bound),
+  first_row  — minimum global row index among matches.
+
+Grid is (query_blocks, row_blocks); row blocks iterate fastest, so the
+outputs (indexed by query block only) are accumulated across row steps —
+initialized at row step 0.  The (BQ, BR) compare tile lives in registers/
+VMEM; the word loop carries a prefix-equality tile exactly like
+pattern_scan but rank-2.
+
+This kernel powers (a) the pure linear-scan query path (small tablets) and
+(b) the hybrid path: binary-search to a row block, then one kernel step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128   # patterns per tile (sublane-major axis of the compare tile)
+BLOCK_R = 256   # rows per tile (lane axis, 128-aligned)
+BIG = 2**30     # "no match" sentinel for first_row
+
+
+def _scan_kernel(patt_ref, plen_ref, win_ref, pos_ref,
+                 count_ref, less_ref, first_ref,
+                 *, n_real: int, n_words: int, n_rows: int):
+    plen = plen_ref[...].reshape(-1, 1).astype(jnp.int32)   # (BQ, 1)
+    pos = pos_ref[...].reshape(1, -1).astype(jnp.int32)     # (1, BR)
+
+    bq = plen.shape[0]
+    br = pos.shape[1]
+    pe = jnp.ones((bq, br), jnp.bool_)
+    lt = jnp.zeros((bq, br), jnp.bool_)
+    for w in range(n_words):
+        a = win_ref[w, :][None, :]                          # row word (1,BR)
+        b = patt_ref[w, :][:, None]                         # pattern  (BQ,1)
+        r = jnp.clip(plen - w * 16, 0, 16).astype(jnp.uint32)
+        full = jnp.uint32(0xFFFFFFFF)
+        mask = jnp.where(r == 0, jnp.uint32(0),
+                         jnp.where(r == 16, full,
+                                   ~((jnp.uint32(1) << (32 - 2 * r)) - 1)))
+        am = a & mask                                       # (BQ, BR)
+        bm = b & mask
+        lt = lt | (pe & (am < bm))
+        pe = pe & (am == bm)
+    truncated = pos + plen > n_real                         # (BQ, BR)
+    eq = pe & ~truncated
+    lt = lt | (pe & truncated)
+
+    row0 = pl.program_id(1) * br
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, br), 1)
+    valid = rows < n_rows                                   # mask row padding
+    eq = eq & valid
+    lt = lt & valid
+    first = jnp.min(jnp.where(eq, rows, jnp.int32(BIG)), axis=1)   # (BQ,)
+    cnt = jnp.sum(eq.astype(jnp.int32), axis=1)
+    less = jnp.sum(lt.astype(jnp.int32), axis=1)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        count_ref[...] = cnt[None, :]
+        less_ref[...] = less[None, :]
+        first_ref[...] = first[None, :]
+
+    @pl.when(pl.program_id(1) != 0)
+    def _acc():
+        count_ref[...] += cnt[None, :]
+        less_ref[...] += less[None, :]
+        first_ref[...] = jnp.minimum(first_ref[...], first[None, :])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_real", "n_rows", "interpret"))
+def tablet_scan_pallas(patterns_t: jnp.ndarray, plen: jnp.ndarray,
+                       windows_t: jnp.ndarray, pos: jnp.ndarray,
+                       *, n_real: int, n_rows: int | None = None,
+                       interpret: bool = False):
+    """patterns_t: (W, BQtot) uint32; plen: (BQtot,); windows_t: (W, BRtot)
+    uint32 — packed windows of consecutive sorted rows; pos: (BRtot,) their
+    text positions.  BQtot % BLOCK_Q == 0, BRtot % BLOCK_R == 0 (caller pads;
+    pad queries with plen=0 rows match everything — strip after; pad rows
+    with pos=n_real so they never match).  Returns (count, less, first_row)
+    int32 (BQtot,)."""
+    W, BQ = patterns_t.shape
+    _, BR = windows_t.shape
+    assert BQ % BLOCK_Q == 0 and BR % BLOCK_R == 0
+    grid = (BQ // BLOCK_Q, BR // BLOCK_R)
+    if n_rows is None:
+        n_rows = BR
+    kernel = functools.partial(_scan_kernel, n_real=n_real, n_words=W,
+                               n_rows=n_rows)
+    qvec = pl.BlockSpec((1, BLOCK_Q), lambda q, r: (0, q))
+    count, less, first = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((W, BLOCK_Q), lambda q, r: (0, q)),
+            qvec,
+            pl.BlockSpec((W, BLOCK_R), lambda q, r: (0, r)),
+            pl.BlockSpec((1, BLOCK_R), lambda q, r: (0, r)),
+        ],
+        out_specs=[qvec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((1, BQ), jnp.int32)] * 3,
+        interpret=interpret,
+    )(patterns_t, plen[None, :], windows_t, pos[None, :])
+    return count[0], less[0], first[0]

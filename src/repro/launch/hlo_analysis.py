@@ -1,0 +1,206 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms.
+
+``collective_bytes`` parses optimized HLO text, sums operand bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+and multiplies collectives inside ``while`` bodies by the loop trip count
+(recovered from the loop-condition constant — exact for counted lax.scan /
+fori_loop loops, which is all this codebase emits).  ``conditional``
+branches contribute their worst-case branch.
+
+Roofline (TPU v5e targets): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every typed shape literal in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    coll_bytes: int = 0                  # direct collective operand bytes
+    coll_count: int = 0
+    calls: list = dataclasses.field(default_factory=list)
+    # (callee_name, multiplier_kind): 'call' | 'while_body' | 'cond_branch'
+    while_bounds: dict = dataclasses.field(default_factory=dict)
+    max_constant: int = 1                # for when it's used as a while cond
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*{", line)
+        if m and not line.lstrip().startswith("ROOT"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Returns {'bytes': int, 'count': int, 'by_kind': {...}} with while-loop
+    trip-count weighting."""
+    comps = _split_computations(hlo)
+    info: dict[str, _Computation] = {}
+    by_kind: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+
+    for name, lines in comps.items():
+        c = _Computation(name)
+        for ln in lines:
+            # largest integer constant (trip-count recovery for conds)
+            for const in re.findall(r"constant\((\d+)\)", ln):
+                c.max_constant = max(c.max_constant, int(const))
+            opm = re.search(
+                r"=\s*\(?([\w\[\],{}\s/#*]+?)\)?\s+"
+                r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                r"collective-permute)(?:-start)?\((.*)$", ln)
+            if opm and "-done" not in ln:
+                operand_text = opm.group(3)
+                b = _shape_bytes(operand_text)
+                if b == 0:           # operands given as %refs only: use result
+                    b = _shape_bytes(opm.group(1))
+                c.coll_bytes += b
+                c.coll_count += 1
+                c._kind_tmp = opm.group(2)
+                by_kind[opm.group(2)] += b   # raw (unweighted) tally
+            wm = re.search(r"while\(.*\).*condition=%?([\w\.\-]+),"
+                           r"\s*body=%?([\w\.\-]+)", ln)
+            if wm:
+                c.calls.append((wm.group(2), "while", wm.group(1)))
+            cm = re.search(r"conditional\(", ln)
+            if cm:
+                for branch in re.findall(
+                        r"(?:true_computation|false_computation|"
+                        r"branch_computations=\{)[=%]*([\w\.\-, %]+)", ln):
+                    for b_ in branch.replace("%", "").split(","):
+                        b_ = b_.strip().rstrip("}")
+                        if b_:
+                            c.calls.append((b_, "cond", None))
+            for callee in re.findall(r"(?:call|fusion)\([^)]*\).*?to_apply=%?"
+                                     r"([\w\.\-]+)", ln):
+                c.calls.append((callee, "call", None))
+        info[name] = c
+
+    def weighted(name: str, seen: frozenset) -> int:
+        if name not in info or name in seen:
+            return 0
+        c = info[name]
+        total = c.coll_bytes
+        cond_best = 0
+        for callee, kind, cond in c.calls:
+            sub = weighted(callee, seen | {name})
+            if kind == "while":
+                trip = info[cond].max_constant if cond in info else 1
+                total += sub * trip
+            elif kind == "cond":
+                cond_best = max(cond_best, sub)
+            else:
+                total += sub
+        return total + cond_best
+
+    entry = None
+    for name in comps:
+        if re.search(r"\bmain\b|entry", name, re.I):
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    total = weighted(entry, frozenset()) if entry else 0
+    count = sum(c.coll_count for c in info.values())
+    return {"bytes": int(total), "count": int(count),
+            "by_kind": {k: int(v) for k, v in by_kind.items() if v}}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> dict:
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * ICI_BW)
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1])[0]
+    total = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "bound_step_s": total,
+    }
+
+
+def analytic_memory_floor(cfg, shape_info, kind: str, chips: int,
+                          param_bytes: int = 2) -> float:
+    """Lower-bound HBM bytes per device per step (perfect fusion):
+    params traffic + one write+read of each layer's residual stream +
+    logits traffic + KV-cache traffic for decode.  The HLO 'bytes accessed'
+    number is the no-fusion UPPER bound; truth on TPU lies between."""
+    L, d, V = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    B = shape_info["global_batch"]
+    S = shape_info["seq_len"] if kind != "decode" else 1
+    tokens = B * S
+    n_params = cfg.param_count()
+    act_bytes = 2
+    if kind == "train":
+        p_traffic = 4 * n_params * param_bytes      # fwd + bwd reads, upd rw
+        a_traffic = 4 * L * tokens * d * act_bytes  # residual save + remat
+        logits = 3 * tokens * V * act_bytes
+    elif kind == "prefill":
+        p_traffic = n_params * param_bytes
+        a_traffic = 2 * L * tokens * d * act_bytes
+        logits = B * V * act_bytes
+    else:
+        n_active = cfg.active_param_count()
+        p_traffic = n_active * param_bytes
+        a_traffic = 2 * L * tokens * d * act_bytes
+        logits = tokens * V * act_bytes
+        # KV/state cache read per step
+        Sc = shape_info["seq_len"]
+        if cfg.attn_type == "mla":
+            kvb = Sc * (cfg.kv_lora_rank + cfg.rope_head_dim)
+        elif cfg.attn_type == "none":
+            kvb = cfg.ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 2
+        else:
+            kvb = Sc * cfg.num_kv_heads * cfg.head_dim * 2
+        n_attn = sum(cfg.layer_kind(i) == "attn" for i in range(L))
+        n_ssm = L - n_attn
+        cache = B * (n_attn * (Sc * cfg.num_kv_heads * cfg.head_dim * 2
+                               if cfg.attn_type != "mla" else
+                               Sc * (cfg.kv_lora_rank + cfg.rope_head_dim))
+                     + n_ssm * cfg.ssm_heads * cfg.ssm_headdim
+                     * cfg.ssm_state * 2) * param_bytes
+        a_traffic += cache
+    total = p_traffic + a_traffic + logits
+    return total / chips

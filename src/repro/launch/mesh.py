@@ -1,0 +1,23 @@
+"""Production meshes.  Functions, never module-level constants — importing
+this module must not touch jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_tablet_mesh(num_devices: int | None = None):
+    """1-D mesh over all devices for the TabletSA store (the serving
+    deployment's own mesh over the same chips)."""
+    n = num_devices if num_devices is not None else len(jax.devices())
+    return jax.make_mesh((n,), ("tablets",))
+
+
+def make_pipeline_mesh():
+    """Multi-pod mesh with the pod axis used as pipeline stages."""
+    return jax.make_mesh((2, 16, 16), ("pod", "data", "model"))

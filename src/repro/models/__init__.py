@@ -1,0 +1,9 @@
+from repro.models import config, layers, moe, ssm, transformer
+from repro.models.config import ModelConfig
+from repro.models.transformer import (decode_step, forward_train,
+                                      init_decode_caches, init_params,
+                                      prefill)
+
+__all__ = ["ModelConfig", "config", "decode_step", "forward_train",
+           "init_decode_caches", "init_params", "layers", "moe", "prefill",
+           "ssm", "transformer"]

@@ -1,0 +1,345 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA/MHA attention, MLA, MLPs.
+
+Functional style: params are nested dicts of jnp arrays; ``init_*`` builds
+them, ``apply``-style functions consume them.  Everything is jit/pjit
+friendly and dtype-polymorphic (params may be fp32 or bf16; softmax and
+norms accumulate in fp32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / np.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return (h * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2 / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, dh) with dh even; positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta))                    # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MHA)
+# ---------------------------------------------------------------------------
+def init_attention(cfg: ModelConfig, key, dtype):
+    d, H, KV, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, H, dh), d, dtype),
+        "wk": _dense_init(ks[1], (d, KV, dh), d, dtype),
+        "wv": _dense_init(ks[2], (d, KV, dh), d, dtype),
+        "wo": _dense_init(ks[3], (H, dh, d), H * dh, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, dh), dtype)
+        p["bk"] = jnp.zeros((KV, dh), dtype)
+        p["bv"] = jnp.zeros((KV, dh), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, dtype)
+        p["k_norm"] = init_rmsnorm(dh, dtype)
+    return p
+
+
+# KV-chunked online-softmax attention kicks in above this sequence length:
+# never materialize (Sq, Sk) score tensors for long prefill (DESIGN.md §5).
+ATTN_CHUNK_THRESHOLD = 8192
+ATTN_KV_CHUNK = 2048
+
+
+class attn_chunking:
+    """Context manager overriding the chunking policy (perf experiments):
+    ``with attn_chunking(threshold=4096, chunk=1024): ...``"""
+
+    def __init__(self, threshold: int, chunk: int):
+        self.t, self.c = threshold, chunk
+
+    def __enter__(self):
+        global ATTN_CHUNK_THRESHOLD, ATTN_KV_CHUNK
+        self._saved = (ATTN_CHUNK_THRESHOLD, ATTN_KV_CHUNK)
+        ATTN_CHUNK_THRESHOLD, ATTN_KV_CHUNK = self.t, self.c
+        return self
+
+    def __exit__(self, *exc):
+        global ATTN_CHUNK_THRESHOLD, ATTN_KV_CHUNK
+        ATTN_CHUNK_THRESHOLD, ATTN_KV_CHUNK = self._saved
+        return False
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=0, kv_len_mask=None):
+    """q: (B, Sq, H, dh), k/v: (B, Sk, KV, dv) with H % KV == 0.
+    fp32 softmax; returns (B, Sq, H, dv).  For Sk above the chunking
+    threshold the KV axis is processed in online-softmax chunks (flash-
+    attention recurrence) so peak memory is O(Sq x chunk), not O(Sq x Sk).
+    """
+    Sk = k.shape[1]
+    Sq = q.shape[1]
+    # Chunking pays only when the (Sq, Sk) score tensor is the problem.
+    # Decode (Sq == 1) scores are (B, H, Sk) — small; the chunk scan's
+    # reshape/moveaxis of the cache costs more than it saves (measured:
+    # the decode_32k memory term dropped ~10x switching to dense, see
+    # EXPERIMENTS.md §Perf).
+    if (Sq > 1 and Sq * Sk >= ATTN_CHUNK_THRESHOLD ** 2
+            and Sk % ATTN_KV_CHUNK == 0):
+        return _sdpa_chunked(q, k, v, causal=causal, q_offset=q_offset,
+                             kv_len_mask=kv_len_mask,
+                             chunk=ATTN_KV_CHUNK)
+    return _sdpa_dense(q, k, v, causal=causal, q_offset=q_offset,
+                       kv_len_mask=kv_len_mask)
+
+
+def _sdpa_dense(q, k, v, *, causal: bool, q_offset=0, kv_len_mask=None):
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    dv = v.shape[3]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, dh)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(dh)
+    Sk = k.shape[1]
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        mask = kpos <= qpos                                   # (Sq, Sk)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if kv_len_mask is not None:                               # (B, Sk) valid
+        logits = jnp.where(kv_len_mask[:, None, None, None, :],
+                           logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, q_offset=0, kv_len_mask=None,
+                  chunk: int = ATTN_KV_CHUNK):
+    """Online-softmax over KV chunks (the flash-attention recurrence in
+    pure lax.scan form — the TPU-native replacement for a CUDA kernel)."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    rep = H // KV
+    nc = Sk // chunk
+    qg = q.reshape(B, Sq, KV, rep, dh).astype(jnp.float32) / np.sqrt(dh)
+
+    kc = jnp.moveaxis(k.reshape(B, nc, chunk, KV, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, chunk, KV, dv), 1, 0)
+    starts = jnp.arange(nc, dtype=jnp.int32) * chunk
+    if kv_len_mask is not None:
+        mc = jnp.moveaxis(kv_len_mask.reshape(B, nc, chunk), 1, 0)
+    else:
+        mc = jnp.ones((nc, B, chunk), bool)
+    qpos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+
+    def step(carry, xs):
+        m, l, acc = carry                    # (B,KV,rep,Sq), ..., (..., dv)
+        kb, vb, k0, mb = xs
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg,
+                            kb.astype(jnp.float32))
+        kpos = k0 + jnp.arange(chunk, dtype=jnp.int32)
+        valid = mb[:, None, None, None, :]
+        if causal:
+            valid = valid & (kpos[None, None, None, None, :]
+                             <= qpos[None, None, None, :, None])
+        logits = jnp.where(valid, logits, -1e30)
+        m_blk = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, rep, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, rep, Sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, starts, mc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, dv)
+    return out.astype(q.dtype)
+
+
+def attention(cfg: ModelConfig, p, x, positions, *, kv_cache=None,
+              kv_len_mask=None):
+    """Causal self-attention.  Training/prefill: kv_cache None -> full seq.
+    Decode: kv_cache = dict(k (B,S,KV,dh), v, length scalar) -> one step;
+    returns (out, new_cache)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        out = _sdpa(q, k, v, causal=True)
+        new_cache = {"k": k, "v": v}
+    else:
+        length = kv_cache["length"]                 # tokens already cached
+        ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, length, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, length, 1)
+        S = ck.shape[1]
+        valid = jnp.arange(S)[None, :] < (length + q.shape[1])
+        out = _sdpa(q, ck, cv, causal=True, q_offset=length,
+                    kv_len_mask=jnp.broadcast_to(valid, (x.shape[0], S)))
+        new_cache = {"k": ck, "v": cv, "length": length + q.shape[1]}
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 family): low-rank Q/KV with decoupled RoPE, compressed
+# KV cache, absorbed decode path.
+# ---------------------------------------------------------------------------
+def init_mla(cfg: ModelConfig, key, dtype):
+    d, H = cfg.d_model, cfg.num_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if r_q:
+        p["wq_a"] = _dense_init(ks[0], (d, r_q), d, dtype)
+        p["q_a_norm"] = init_rmsnorm(r_q, dtype)
+        p["wq_b"] = _dense_init(ks[1], (r_q, H, dn + dr), r_q, dtype)
+    else:
+        p["wq"] = _dense_init(ks[1], (d, H, dn + dr), d, dtype)
+    p["wkv_a"] = _dense_init(ks[2], (d, r_kv + dr), d, dtype)
+    p["kv_a_norm"] = init_rmsnorm(r_kv, dtype)
+    p["wk_b"] = _dense_init(ks[3], (r_kv, H, dn), r_kv, dtype)
+    p["wv_b"] = _dense_init(ks[4], (r_kv, H, dv), r_kv, dtype)
+    p["wo"] = _dense_init(ks[5], (H, dv, d), H * dv, dtype)
+    return p
+
+
+def _mla_q(cfg, p, x):
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+        cq = rmsnorm(p["q_a_norm"], cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    return jnp.split(q, [cfg.head_dim], axis=-1)   # q_nope, q_rope
+
+
+def mla_attention(cfg: ModelConfig, p, x, positions, *, kv_cache=None):
+    """Prefill/train path: materialized K/V (cache stays compressed).
+    Decode path (kv_cache given): absorbed attention over latent cache.
+    Cache layout: {"ckv": (B, S, r_kv), "krope": (B, S, dr), "length"}."""
+    B, S, _ = x.shape
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(cfg, p, x)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    ckv = rmsnorm(p["kv_a_norm"], ckv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+
+    if kv_cache is None:
+        # materialized: k = [W_uk ckv ; k_rope], v = W_uv ckv
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_b"])
+        v = jnp.einsum("bsr,rhv->bshv", ckv, p["wv_b"])
+        H = cfg.num_heads
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        # pad v to head_dim of q/k for _sdpa reuse? keep separate einsum:
+        out = _sdpa_mla(q, k, v)
+        new_cache = {"ckv": ckv, "krope": k_rope}
+    else:
+        length = kv_cache["length"]
+        cc = jax.lax.dynamic_update_slice_in_dim(kv_cache["ckv"], ckv,
+                                                 length, 1)
+        cr = jax.lax.dynamic_update_slice_in_dim(kv_cache["krope"], k_rope,
+                                                 length, 1)
+        # absorbed: q_lat = q_nope @ W_uk  (B,S,H,r)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])
+        Sc = cc.shape[1]
+        logits = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                             cc.astype(jnp.float32))
+                  + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                               cr.astype(jnp.float32)))
+        logits = logits / np.sqrt(dn + dr)
+        qpos = length + jnp.arange(S)[:, None]
+        valid = (jnp.arange(Sc)[None, :] <= qpos)               # causal+len
+        logits = jnp.where(valid[None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        lat_out = jnp.einsum("bhst,btr->bshr", w, cc.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhv->bshv", lat_out.astype(x.dtype),
+                         p["wv_b"])
+        new_cache = {"ckv": cc, "krope": cr, "length": length + S}
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def _sdpa_mla(q, k, v):
+    """MHA with distinct q/k dim vs v dim (MLA materialized path) — routed
+    through the shared (chunk-capable) attention with KV == H, rep == 1."""
+    return _sdpa(q, k, v, causal=True)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, key, dtype, d_ff=None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act == "swiglu":
+        return {"wi": _dense_init(ks[0], (d, f), d, dtype),
+                "wg": _dense_init(ks[1], (d, f), d, dtype),
+                "wo": _dense_init(ks[2], (f, d), f, dtype)}
+    return {"wi": _dense_init(ks[0], (d, f), d, dtype),
+            "wo": _dense_init(ks[2], (f, d), f, dtype)}
+
+
+def mlp(cfg: ModelConfig, p, x):
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    return h @ p["wo"]

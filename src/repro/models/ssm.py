@@ -1,0 +1,170 @@
+"""Mamba-2 block via the SSD (state-space duality) algorithm
+[arXiv:2405.21060], JAX port of the paper's minimal chunked formulation.
+
+Train/prefill: chunked SSD — intra-chunk quadratic (attention-like) term +
+inter-chunk recurrent state passed through a cumulative-decay scan.
+Decode: O(1) recurrent state update (the SSM superpower; this is why
+mamba2/jamba run the long_500k cell while full-attention archs skip it).
+
+Shapes follow the paper: d_inner = expand*d_model, heads = d_inner/headdim,
+single B/C group (G=1), scalar-per-head A.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, init_rmsnorm, rmsnorm
+
+
+def init_ssm(cfg: ModelConfig, key, dtype):
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 5)
+    return {
+        # fused input projection: [z (di), xBC (di+2N), dt (H)]
+        "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * N + H), d, dtype),
+        "conv_w": _dense_init(ks[1], (cfg.ssm_conv, conv_ch),
+                              cfg.ssm_conv, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log)
+        "dt_bias": jnp.full((H,), np.log(np.e - 1), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": _dense_init(ks[2], (di, d), di, dtype),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv, kernel K (static small): u (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(u)
+    for i in range(K):
+        shift = K - 1 - i
+        if shift == 0:
+            out = out + u * w[i]
+        else:
+            out = out + jnp.pad(u, ((0, 0), (shift, 0), (0, 0))
+                                )[:, :-shift] * w[i]
+    return out + b
+
+
+def _segsum(a):
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-tri cumulative sums:
+    out[i, j] = sum_{j < s <= i} a[s], -inf above diagonal."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, shard=None):
+    """SSD forward.  x: (b, s, h, p); dt: (b, s, h) (discretization step,
+    post-softplus); A: (h,) negative; B, C: (b, s, n).
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+
+    ``shard`` is accepted for API parity; constraint experiments on the
+    SSD intermediates measured NEGATIVE (reshard copies, EXPERIMENTS.md
+    §Perf iteration G) so none are applied."""
+    if shard is None:
+        shard = lambda t, _n: t
+    b, s, h, pdim = x.shape
+    n = B.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # pad with dt=0 steps: decay=1, zero input -> state untouched
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    # chunked views
+    xc = x.reshape(b, nc, chunk, h, pdim)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    dA = dtc * A[None, None, None, :]                    # (b,nc,Q,h) log decay
+    dA = jnp.moveaxis(dA, -1, 2)                         # (b,nc,h,Q)
+    xbar = xc * dtc[..., None]                           # dt-weighted input
+
+    # ---- intra-chunk (quadratic attention-like term)
+    L = jnp.exp(_segsum(dA))                             # (b,nc,h,Q,Q)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)       # (b,nc,Q,Q)
+    y_intra = jnp.einsum("bcls,bchls,bcshp->bclhp",
+                         scores, L, xbar)
+
+    # ---- chunk final states (decay from step s+1 .. chunk end)
+    cums = jnp.cumsum(dA, axis=-1)
+    decay_to_end = jnp.exp(cums[..., -1:] - cums)        # (b,nc,h,Q)
+    states = jnp.einsum("bcsn,bchs,bcshp->bchpn",
+                        Bc, decay_to_end, xbar)          # (b,nc,h,p,n)
+
+    # ---- inter-chunk scan over nc
+    chunk_decay = jnp.exp(cums[..., -1])                 # (b,nc,h)
+
+    def scan_fn(prev, inp):
+        st, dec = inp                                    # (b,h,p,n), (b,h)
+        new = prev * dec[..., None, None] + st
+        return new, prev                                 # emit state BEFORE
+
+    init = jnp.zeros((b, h, pdim, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b,nc,h,p,n)
+
+    # ---- inter-chunk contribution
+    decay_from_start = jnp.exp(cums)                     # (b,nc,h,Q)
+    y_inter = jnp.einsum("bcln,bchl,bchpn->bclhp",
+                         Cc, decay_from_start, prev_states)
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    return y[:, :s_orig], final
+
+
+def ssm_block(cfg: ModelConfig, p, x, *, state=None, shard=None):
+    """Full Mamba-2 mixer.  Train/prefill: state None.
+    Decode: state = {"conv": (B, K-1, C_ch), "ssm": (B, H, P, N), ...}."""
+    B_, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    proj = x @ p["in_proj"]                               # (B,S,2di+2N+H)
+    z, xBC, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                              # (H,)
+
+    if state is None:
+        xBC_raw = xBC                        # conv cache stores PRE-conv taps
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        xs, Bmat, Cmat = jnp.split(xBC, [di, di + N], axis=-1)
+        xh = xs.reshape(B_, S, H, P)
+        y, final = ssd_chunked(xh.astype(jnp.float32), dt,
+                               A, Bmat.astype(jnp.float32),
+                               Cmat.astype(jnp.float32), cfg.ssm_chunk,
+                               shard=shard)
+        y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+        new_state = {"ssm": final,
+                     "conv": xBC_raw[:, -(cfg.ssm_conv - 1):, :]}
+    else:
+        # decode: S == 1
+        conv_in = jnp.concatenate([state["conv"], xBC], axis=1)
+        xBC = jax.nn.silu(
+            jnp.sum(conv_in * p["conv_w"], axis=1, keepdims=True)
+            + p["conv_b"])
+        xs, Bmat, Cmat = jnp.split(xBC, [di, di + N], axis=-1)
+        xh = xs.reshape(B_, 1, H, P).astype(jnp.float32)
+        dA = jnp.exp(dt[:, 0] * A[None, :])               # (B,H)
+        xbar = xh[:, 0] * dt[:, 0, :, None]               # (B,H,P)
+        st = state["ssm"] * dA[..., None, None] \
+            + jnp.einsum("bhp,bn->bhpn", xbar, Bmat[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cmat[:, 0].astype(jnp.float32), st)
+        y = (y + xh[:, 0] * p["D"][None, :, None])[:, None]
+        new_state = {"ssm": st, "conv": conv_in[:, 1:, :]}
+
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"], new_state

@@ -1,0 +1,481 @@
+"""Decoder stacks for all assigned architectures.
+
+Layer layout: an optional *prefix* of unrolled layers (DeepSeek's first
+dense layers) followed by a ``lax.scan`` over *periods* — the repeating
+structural unit (1 for homogeneous stacks, 8 for Jamba's [7 mamba + 1 attn]
+interleave with alternating MoE).  Stacked params keep the HLO compact at
+61-layer/671B scale, which is what makes the 512-device dry-run compile.
+
+Three entry points per model: ``forward_train`` (full-seq logits/loss),
+``prefill`` (logits + caches), ``decode_step`` (one token against caches).
+Sharding is injected via an optional ``shard`` callback (logical-name ->
+with_sharding_constraint), keeping model code mesh-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as Ls
+from repro.models import moe as Moe
+from repro.models import ssm as Ssm
+from repro.models.config import ModelConfig
+
+ShardFn = Callable[[jnp.ndarray, str], jnp.ndarray]
+
+
+def _noshard(x, _name):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_layer(cfg: ModelConfig, i: int, key, dtype):
+    kind = cfg.layer_kind(i)
+    ks = jax.random.split(key, 3)
+    p: dict[str, Any] = {"ln1": Ls.init_rmsnorm(cfg.d_model, dtype)}
+    if kind == "attn":
+        if cfg.attn_type == "mla":
+            p["attn"] = Ls.init_mla(cfg, ks[0], dtype)
+        else:
+            p["attn"] = Ls.init_attention(cfg, ks[0], dtype)
+    else:
+        p["ssm"] = Ssm.init_ssm(cfg, ks[0], dtype)
+    if cfg.layer_is_moe(i):
+        p["ln2"] = Ls.init_rmsnorm(cfg.d_model, dtype)
+        p["moe"] = Moe.init_moe(cfg, ks[1], dtype)
+    elif cfg.d_ff > 0:
+        p["ln2"] = Ls.init_rmsnorm(cfg.d_model, dtype)
+        p["mlp"] = Ls.init_mlp(cfg, ks[1], dtype)
+    return p
+
+
+def _stack_info(cfg: ModelConfig):
+    prefix = cfg.first_dense_layers
+    period = cfg.period
+    rest = cfg.num_layers - prefix
+    assert rest % period == 0, (cfg.name, rest, period)
+    return prefix, period, rest // period
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    prefix, period, n_periods = _stack_info(cfg)
+    keys = jax.random.split(key, 4 + prefix + period * n_periods)
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(dtype),
+        "ln_f": Ls.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = Ls._dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), cfg.d_model, dtype)
+    params["prefix"] = [
+        _init_layer(cfg, i, keys[4 + i], dtype) for i in range(prefix)]
+    # stacked periods: for each position in the period, stack n_periods inits
+    stack = []
+    for pos in range(period):
+        per = [_init_layer(cfg, prefix + c * period + pos,
+                           keys[4 + prefix + c * period + pos], dtype)
+               for c in range(n_periods)]
+        stack.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    params["stack"] = stack
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": Ls._dense_init(keys[2], (2 * cfg.d_model, cfg.d_model),
+                                   2 * cfg.d_model, dtype),
+            "ln": Ls.init_rmsnorm(cfg.d_model, dtype),
+            "layer": _init_layer(cfg, cfg.num_layers - 1, keys[3], dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+def _apply_layer(cfg: ModelConfig, layer_idx_kindinfo, p, x, positions,
+                 cache, shard: ShardFn):
+    """cache: None (train) | dict (prefill collects / decode consumes)."""
+    kind, is_moe = layer_idx_kindinfo
+    h = Ls.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        if cfg.attn_type == "mla":
+            mix, new_cache = Ls.mla_attention(cfg, p["attn"], h, positions,
+                                              kv_cache=cache)
+        else:
+            mix, new_cache = Ls.attention(cfg, p["attn"], h, positions,
+                                          kv_cache=cache)
+    else:
+        mix, new_cache = Ssm.ssm_block(cfg, p["ssm"], h, state=cache,
+                                       shard=shard)
+    x = x + mix
+    x = shard(x, "act")
+    if "moe" in p:
+        h2 = Ls.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        f, aux = Moe.moe_ffn(cfg, p["moe"], h2, shard=shard)
+        x = x + f
+    elif "mlp" in p:
+        h2 = Ls.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + Ls.mlp(cfg, p["mlp"], h2)
+    x = shard(x, "act")
+    return x, new_cache, aux
+
+
+def _period_kinds(cfg: ModelConfig):
+    prefix, period, _ = _stack_info(cfg)
+    return [(cfg.layer_kind(prefix + pos),
+             cfg.layer_is_moe(prefix + pos)) for pos in range(period)]
+
+
+def _run_stack(cfg: ModelConfig, params, x, positions, caches,
+               shard: ShardFn, collect_cache: bool, remat: bool = False,
+               scan_unroll: int | bool = 1):
+    """Prefix layers unrolled, then scan over periods.
+
+    Modes: train (caches=None, collect_cache=False), prefill (caches=None,
+    collect_cache=True -> caches emitted), decode (caches given -> updated).
+    ``caches``: {"prefix": [per-layer], "stack": [stacked per period-pos]}.
+    """
+    prefix, period, n_periods = _stack_info(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_prefix_caches = []
+    for i, p in enumerate(params["prefix"]):
+        c = caches["prefix"][i] if caches else None
+        x, nc, aux = _apply_layer(
+            cfg, (cfg.layer_kind(i), cfg.layer_is_moe(i)), p, x,
+            positions, c, shard)
+        aux_total += aux
+        new_prefix_caches.append(nc)
+
+    kinds = _period_kinds(cfg)
+
+    def period_body(h, auxc, stacked_p, stacked_c, layer_remat=False):
+        new_cs = []
+        for pos in range(period):
+            c = stacked_c[pos] if stacked_c is not None else None
+            if layer_remat and c is None:
+                # nested per-layer remat: without it the backward of a
+                # period-8 hybrid block holds 7 Mamba layers' SSD
+                # intermediates at once (measured 350 GB/dev on jamba
+                # train_4k; ~20x less with this).
+                def one(p_, h_, _pos=pos):
+                    y, _, aux = _apply_layer(cfg, kinds[_pos], p_, h_,
+                                             positions, None, shard)
+                    return y, aux
+                h, aux = jax.checkpoint(one, prevent_cse=False)(
+                    stacked_p[pos], h)
+                nc = None
+            else:
+                h, nc, aux = _apply_layer(cfg, kinds[pos], stacked_p[pos], h,
+                                          positions, c, shard)
+            auxc = auxc + aux
+            new_cs.append(nc)
+        return h, auxc, new_cs
+
+    new_stack_caches = None
+    if n_periods:
+        if caches is None and not collect_cache:        # --- train
+            def body(carry, p_):
+                h, auxc, _ = period_body(*carry, p_, None,
+                                         layer_remat=remat and period > 1)
+                return (h, auxc), None
+            if remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), params["stack"],
+                unroll=scan_unroll)
+        elif caches is None:                            # --- prefill
+            def body(carry, p_):
+                h, auxc, cs = period_body(*carry, p_, None)
+                return (h, auxc), cs
+            (x, aux_total), new_stack_caches = jax.lax.scan(
+                body, (x, aux_total), params["stack"],
+                unroll=scan_unroll)
+        else:                                           # --- decode
+            def body(carry, pc):
+                p_, c_ = pc
+                h, auxc, cs = period_body(*carry, p_, c_)
+                return (h, auxc), cs
+            (x, aux_total), new_stack_caches = jax.lax.scan(
+                body, (x, aux_total), (params["stack"], caches["stack"]),
+                unroll=scan_unroll)
+
+    new_caches = ({"prefix": new_prefix_caches, "stack": new_stack_caches}
+                  if (collect_cache or caches) else None)
+    return x, aux_total, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+def _embed_inputs(cfg: ModelConfig, params, batch, shard: ShardFn):
+    """Returns (x (B,S,d), label_mask (B,S) or None).
+
+    Frontend stubs per spec: audio_stub consumes precomputed frame
+    embeddings; vlm_stub prepends precomputed patch embeddings to the
+    embedded text tokens (labels masked over the patch positions)."""
+    if cfg.frontend == "audio_stub":
+        x = batch["embeds"]
+        return x, None
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vlm_stub":
+        patches = batch["patches"]                      # (B, P, d)
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros(patches.shape[:2], bool),
+             jnp.ones(tokens.shape, bool)], axis=1)
+        return x, mask
+    return x, None
+
+
+def _logits(cfg: ModelConfig, params, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+
+
+def softmax_xent(logits, labels, mask=None):
+    """fp32 cross-entropy, mean over valid positions."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+def xent_from_hidden(cfg: ModelConfig, params, h, labels, *,
+                     chunk: "int | None" = None):
+    """Cross-entropy from pre-logits hidden states.
+
+    ``chunk``: sequence-chunked streaming loss — only (B, chunk, V) logits
+    are ever live (scan over seq chunks) instead of the full (B, S, V)
+    fp32 tensor.  Memory-hillclimb loss (EXPERIMENTS.md §Perf);
+    chunk=None is the baseline dense path."""
+    if chunk is None or h.shape[1] <= chunk:
+        return softmax_xent(_logits(cfg, params, h), labels)
+    B, S, d = h.shape
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    nc = h.shape[1] // chunk
+    hc = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    valid_c = jnp.broadcast_to(
+        jnp.moveaxis((jnp.arange(h.shape[1]) < S).reshape(1, nc, chunk),
+                     1, 0), (nc, B, chunk))
+
+    def body(acc, xs):
+        hb, lb, vb = xs
+        logits = _logits(cfg, params, hb).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        nll = jnp.where(vb, logz - gold, 0.0)
+        return acc + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (hc, lc, valid_c))
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+def forward_train(cfg: ModelConfig, params, batch, *, shard: ShardFn = _noshard,
+                  remat: bool = True, scan_unroll: int | bool = 1,
+                  loss_chunk: "int | None" = None):
+    """batch: tokens/embeds (+patches) and labels.  Returns (loss, metrics).
+    Next-token LM loss; labels = inputs shifted by caller OR derived here
+    when batch has only tokens (teacher forcing on tokens[1:])."""
+    x, vis_mask = _embed_inputs(cfg, params, batch, shard)
+    x = shard(x, "act")
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x, aux, _ = _run_stack(cfg, params, x, positions, None, shard,
+                           collect_cache=False, remat=remat,
+                           scan_unroll=scan_unroll)
+    x = Ls.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+    if "labels" in batch:
+        labels = batch["labels"]
+    else:
+        labels = batch["tokens"]
+    if cfg.frontend == "vlm_stub":
+        # text tokens start after the patches; predict next text token
+        text_len = labels.shape[1]
+        hx = x[:, -text_len:-1]
+        loss = xent_from_hidden(cfg, params, hx, labels[:, 1:],
+                                chunk=loss_chunk)
+    else:
+        loss = xent_from_hidden(cfg, params, x[:, :-1], labels[:, 1:],
+                                chunk=loss_chunk)
+
+    metrics = {"xent": loss, "aux": aux}
+    total = loss + aux
+    if cfg.mtp_depth:
+        mtp_loss = _mtp_loss(cfg, params, x, batch, positions, shard)
+        metrics["mtp"] = mtp_loss
+        total = total + cfg.mtp_loss_weight * mtp_loss
+    metrics["loss"] = total
+    return total, metrics
+
+
+def _mtp_loss(cfg: ModelConfig, params, h_final, batch, positions,
+              shard: ShardFn):
+    """DeepSeek-V3 multi-token prediction (depth 1): combine the trunk's
+    hidden state at t with the embedding of token t+1 to predict t+2."""
+    tokens = batch.get("labels", batch.get("tokens"))
+    if tokens is None or cfg.frontend != "none":
+        return jnp.zeros((), jnp.float32)
+    p = params["mtp"]
+    emb_next = jnp.take(params["embed"], tokens[:, 1:], axis=0)  # t+1 emb
+    h = h_final[:, :-1]
+    comb = jnp.concatenate(
+        [Ls.rmsnorm(p["ln"], h, cfg.norm_eps), emb_next], axis=-1)
+    x = comb @ p["proj"]
+    kind = (cfg.layer_kind(cfg.num_layers - 1),
+            cfg.layer_is_moe(cfg.num_layers - 1))
+    x, _, _ = _apply_layer(cfg, kind, p["layer"], x, positions[:, :-1],
+                           None, shard)
+    logits = _logits(cfg, params, x[:, :-1])
+    return softmax_xent(logits, tokens[:, 2:])
+
+
+def prefill(cfg: ModelConfig, params, batch, *, max_len: int | None = None,
+            shard: ShardFn = _noshard, scan_unroll: int | bool = 1):
+    """Full-sequence forward that also returns decode caches.
+    ``max_len``: cache capacity (>= S); caches are padded to it."""
+    x, _ = _embed_inputs(cfg, params, batch, shard)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x, _, caches = _run_stack(cfg, params, x, positions, None, shard,
+                              collect_cache=True, scan_unroll=scan_unroll)
+    x = Ls.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _logits(cfg, params, x[:, -1:])
+    caches = _pad_caches(cfg, caches, S, max_len or S)
+    return logits, caches
+
+
+def _pad_caches(cfg: ModelConfig, caches, cur_len: int, max_len: int):
+    """Grow KV/latent caches to capacity and attach lengths."""
+    def pad_leaf(leaf_name, c):
+        def pad(x):
+            if x.ndim >= 2 and x.shape[1] == cur_len:
+                widths = [(0, 0)] * x.ndim
+                widths[1] = (0, max_len - cur_len)
+                return jnp.pad(x, widths)
+            return x
+        return jax.tree.map(pad, c)
+
+    def attach(c):
+        if c is None:
+            return None
+        c = dict(c)
+        if "k" in c or "ckv" in c:          # attention-style cache
+            c = pad_leaf("kv", c)
+            c["length"] = jnp.int32(cur_len) if "length" not in c \
+                else c["length"]
+        return c
+
+    out = {"prefix": [attach(c) for c in caches["prefix"]],
+           "stack": []}
+    for c in caches["stack"]:
+        if c is None:
+            out["stack"].append(None)
+            continue
+        cc = dict(c)
+        if "k" in cc or "ckv" in cc:
+            def pad(x):
+                if x.ndim >= 3 and x.shape[2] == cur_len:
+                    widths = [(0, 0)] * x.ndim
+                    widths[2] = (0, max_len - cur_len)
+                    return jnp.pad(x, widths)
+                return x
+            cc = jax.tree.map(pad, cc)
+            n_periods = _stack_info(cfg)[2]
+            cc["length"] = jnp.full((n_periods,), cur_len, jnp.int32)
+        out["stack"].append(cc)
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, tokens, caches, *,
+                shard: ShardFn = _noshard, embeds=None,
+                scan_unroll: int | bool = 1):
+    """One decode step.  tokens: (B, 1) int32 (or embeds (B,1,d) for
+    audio_stub).  Returns (logits (B,1,V), new_caches)."""
+    if cfg.frontend == "audio_stub":
+        x = embeds
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "act")
+    length = _cache_length(caches)
+    positions = length + jnp.zeros(x.shape[:2], jnp.int32)
+    x, _, new_caches = _run_stack(cfg, params, x, positions, caches, shard,
+                                  collect_cache=False,
+                                  scan_unroll=scan_unroll)
+    x = Ls.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return _logits(cfg, params, x), new_caches
+
+
+def _cache_length(caches):
+    for c in caches["prefix"]:
+        if c is not None and "length" in c:
+            return c["length"]
+    for c in caches["stack"]:
+        if c is not None and "length" in c:
+            return c["length"][0]
+    return jnp.int32(0)
+
+
+def init_decode_caches(cfg: ModelConfig, batch_size: int, max_len: int,
+                       dtype=jnp.float32):
+    """Fresh empty caches for decode-only dry-runs (decode_32k/long_500k):
+    capacity max_len, length tracks filled prefix (set to max_len - 1 by
+    the dry-run to model a full context)."""
+    prefix, period, n_periods = _stack_info(cfg)
+
+    def attn_cache(stacked: bool):
+        if cfg.attn_type == "mla":
+            c = {"ckv": jnp.zeros((batch_size, max_len, cfg.kv_lora_rank),
+                                  dtype),
+                 "krope": jnp.zeros((batch_size, max_len, cfg.rope_head_dim),
+                                    dtype)}
+        else:
+            c = {"k": jnp.zeros((batch_size, max_len, cfg.num_kv_heads,
+                                 cfg.head_dim), dtype),
+                 "v": jnp.zeros((batch_size, max_len, cfg.num_kv_heads,
+                                 cfg.head_dim), dtype)}
+        return c
+
+    def ssm_cache():
+        return {"ssm": jnp.zeros((batch_size, cfg.ssm_heads,
+                                  cfg.ssm_headdim, cfg.ssm_state),
+                                 jnp.float32),
+                "conv": jnp.zeros((batch_size, cfg.ssm_conv - 1,
+                                   cfg.d_inner + 2 * cfg.ssm_state), dtype)}
+
+    caches = {"prefix": [], "stack": []}
+    for i in range(prefix):
+        c = attn_cache(False) if cfg.layer_kind(i) == "attn" else ssm_cache()
+        if "k" in c or "ckv" in c:
+            c["length"] = jnp.int32(0)
+        caches["prefix"].append(c)
+    for pos in range(period):
+        kind = cfg.layer_kind(prefix + pos)
+        c = attn_cache(True) if kind == "attn" else ssm_cache()
+        c = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), c)
+        if "k" in c or "ckv" in c:
+            c["length"] = jnp.zeros((n_periods,), jnp.int32)
+        caches["stack"].append(c)
+    return caches

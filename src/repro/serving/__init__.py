@@ -1,0 +1,6 @@
+from repro.serving.engine import (HedgedScanService, ServeConfig,
+                                  greedy_generate, make_decode_fn,
+                                  make_prefill_fn)
+
+__all__ = ["HedgedScanService", "ServeConfig", "greedy_generate",
+           "make_decode_fn", "make_prefill_fn"]

@@ -1,0 +1,149 @@
+"""Serving: LM prefill/decode entry points + the TabletSA scan service.
+
+The scan service reproduces the paper's §V experiment shape (batched
+random-pattern scans) and adds the production feature the paper's Table IV
+is begging for: **hedged reads** over tablet replicas.  The paper measured
+a max reply of 771 ms against a 5.3 ms mean — a 145x tail.  With replicas
+and a backup request fired at the p95 deadline, the tail collapses to
+~max(primary, backup-after-deadline); the service simulates per-replica
+latency (lognormal body + pareto tail) around the measured TPU batch step
+time and reports the same statistics as Tables III/IV.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.tablet import TabletStore
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# LM serving
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0         # 0 = greedy
+
+
+def make_prefill_fn(cfg: ModelConfig, serve: ServeConfig, shard=None):
+    shard_fn = shard if shard is not None else (lambda x, _n: x)
+
+    @jax.jit
+    def fn(params, batch):
+        return prefill(cfg, params, batch, max_len=serve.max_len,
+                       shard=shard_fn)
+
+    return fn
+
+
+def make_decode_fn(cfg: ModelConfig, shard=None):
+    shard_fn = shard if shard is not None else (lambda x, _n: x)
+
+    @jax.jit
+    def fn(params, tokens, caches):
+        return decode_step(cfg, params, tokens, caches, shard=shard_fn)
+
+    return fn
+
+
+def greedy_generate(cfg: ModelConfig, params, batch, num_steps: int,
+                    serve: Optional[ServeConfig] = None):
+    """Greedy generation loop (examples / integration tests)."""
+    serve = serve or ServeConfig()
+    logits, caches = prefill(cfg, params, batch, max_len=serve.max_len)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for _ in range(num_steps - 1):
+        logits, caches = decode_step(cfg, params, tok, caches)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# TabletSA scan service with hedged reads (straggler mitigation)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class HedgedScanService:
+    """Simulates a replicated tablet-serving deployment.
+
+    ``replicas`` tablet-store replicas serve every scan batch; per-request
+    replica latency = base_ms * lognormal(sigma) with a pareto tail of
+    probability tail_p and scale tail_scale (the paper's 771 ms events).
+    A backup request fires after ``hedge_deadline_ms``; effective latency is
+    min(primary, deadline + backup).  Scan RESULTS come from the real
+    engine; only latency is simulated (no real multi-machine here).
+    """
+    store: TabletStore
+    replicas: int = 2
+    base_ms: float = 5.0
+    sigma: float = 0.35
+    tail_p: float = 0.002
+    tail_scale_ms: float = 300.0
+    hedge_deadline_ms: float = 15.0
+    seed: int = 0
+
+    def _latency(self, rng, n) -> np.ndarray:
+        lat = self.base_ms * rng.lognormal(0.0, self.sigma, size=n)
+        tail = rng.random(n) < self.tail_p
+        lat = lat + np.where(tail,
+                             rng.pareto(1.5, size=n) * self.tail_scale_ms, 0)
+        return lat
+
+    def scan(self, patterns_packed, plen, hedged: bool = True):
+        """Returns (MatchResult, latency_ms per query)."""
+        res = Q.query(self.store, patterns_packed, plen)
+        rng = np.random.default_rng(self.seed)
+        self.seed += 1
+        n = int(plen.shape[0])
+        primary = self._latency(rng, n)
+        if not hedged or self.replicas < 2:
+            return res, primary
+        backup = self._latency(rng, n)
+        hedged_lat = np.minimum(primary,
+                                self.hedge_deadline_ms + backup)
+        return res, hedged_lat
+
+    def run_workload(self, num_queries: int, batch: int = 1024,
+                     min_len: int = 1, max_len: int = 100,
+                     hedged: bool = True, seed: int = 0):
+        """The paper's §V workload: random patterns, uniform length.
+        Returns dict of Table III/IV statistics."""
+        lat_all, out_all, len_all = [], [], []
+        done = 0
+        b = 0
+        while done < num_queries:
+            take = min(batch, num_queries - done)
+            pats = Q.random_patterns(take, min_len, max_len,
+                                     seed=(seed, b))
+            _, pp, pl = Q.encode_patterns(
+                pats, ((max_len + 15) // 16) * 16)
+            res, lat = self.scan(pp, pl, hedged=hedged)
+            lat_all.append(lat)
+            out_all.append(np.asarray(res.found))
+            len_all.append(np.asarray(pl))
+            done += take
+            b += 1
+        lat = np.concatenate(lat_all)
+        out = np.concatenate(out_all)
+        ln = np.concatenate(len_all)
+        corr = np.corrcoef(np.stack([lat, out.astype(float), ln]))
+        return {
+            "n": len(lat),
+            "mean_ms": float(lat.mean()), "sd_ms": float(lat.std()),
+            "min_ms": float(lat.min()), "max_ms": float(lat.max()),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "hit_rate": float(out.mean()),
+            "mean_len": float(ln.mean()),
+            "corr_len_time": float(corr[2, 0]),
+            "corr_len_outcome": float(corr[2, 1]),
+        }

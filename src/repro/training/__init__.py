@@ -1,0 +1,6 @@
+from repro.training import optimizer
+from repro.training.optimizer import OptConfig
+from repro.training.train_step import TrainState, make_train_step, train_state_init
+
+__all__ = ["OptConfig", "TrainState", "make_train_step", "optimizer",
+           "train_state_init"]

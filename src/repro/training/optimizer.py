@@ -1,0 +1,156 @@
+"""Optimizers: AdamW and Adafactor (factored second moment).
+
+Giant-MoE configs (deepseek-v3, kimi-k2) train with Adafactor so optimizer
+state fits v5e HBM (DESIGN.md §5); everything else uses AdamW.  Functional
+API: ``init(params) -> state``, ``apply(grads, state, params, step, lr) ->
+(new_params, new_state)``.  Global-norm clipping and decoupled weight decay
+included; LR schedule = linear warmup + cosine decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9              # adafactor: 0.0 disables momentum
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32   # bf16 halves optimizer HBM
+
+
+def lr_schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(cfg: OptConfig, params):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def adamw_apply(cfg: OptConfig, grads, state, params, step, lr):
+    b1, b2 = cfg.b1, cfg.b2
+    t = step + 1
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh = m32 / (1 - b1 ** t)
+        vh = v32 / (1 - b2 ** t)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(cfg.state_dtype), v32.astype(cfg.state_dtype))
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) — factored v for matrices, full v for vectors
+# ---------------------------------------------------------------------------
+def _factored(shape):
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(cfg: OptConfig, params):
+    def init_one(p):
+        st = {}
+        if _factored(p.shape):
+            st["vr"] = jnp.zeros(p.shape[:-1], cfg.state_dtype)
+            st["vc"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], cfg.state_dtype)
+        else:
+            st["v"] = jnp.zeros(p.shape, cfg.state_dtype)
+        if cfg.b1 > 0:
+            st["m"] = jnp.zeros(p.shape, cfg.state_dtype)
+        return st
+    return jax.tree.map(init_one, params)
+
+
+def adafactor_apply(cfg: OptConfig, grads, state, params, step, lr):
+    b2 = cfg.b2
+    t = step + 1
+    bias = 1 - b2 ** t
+
+    def upd(g, st, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        new_st = {}
+        if "vr" in st:
+            vr = b2 * st["vr"].astype(jnp.float32) + (1 - b2) * g2.mean(-1)
+            vc = b2 * st["vc"].astype(jnp.float32) + (1 - b2) * g2.mean(-2)
+            new_st["vr"] = vr.astype(cfg.state_dtype)
+            new_st["vc"] = vc.astype(cfg.state_dtype)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.clip(vr.mean(-1)[..., None, None], 1e-30)) / bias
+            rms = jnp.sqrt(denom)
+        else:
+            v = b2 * st["v"].astype(jnp.float32) + (1 - b2) * g2
+            new_st["v"] = v.astype(cfg.state_dtype)
+            rms = jnp.sqrt(v / bias)
+        delta = g / jnp.maximum(rms, cfg.eps)
+        if cfg.b1 > 0:
+            m = cfg.b1 * st["m"].astype(jnp.float32) + (1 - cfg.b1) * delta
+            new_st["m"] = m.astype(cfg.state_dtype)
+            delta = m
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_st)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state)
+    outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = tdef.unflatten([o[0] for o in outs])
+    new_state = tdef.unflatten([o[1] for o in outs])
+    return new_params, new_state
+
+
+def init(cfg: OptConfig, params):
+    return (adamw_init if cfg.kind == "adamw" else adafactor_init)(cfg, params)
+
+
+def apply(cfg: OptConfig, grads, state, params, step):
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    fn = adamw_apply if cfg.kind == "adamw" else adafactor_apply
+    new_params, new_state = fn(cfg, grads, state, params, step, lr)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,88 @@
+"""Training step: loss/grad, microbatch accumulation, optimizer apply.
+
+Gradient accumulation is a ``lax.scan`` over microbatches with fp32
+accumulators; with GSPMD the cross-device grad reduction is deferred to
+the single consumer after the loop, which is what lets XLA overlap the
+reduce-scatter with the next microbatch's backward (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward_train
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("params", "opt_state", "step"),
+         meta_fields=())
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def train_state_init(model_cfg: ModelConfig, opt_cfg: opt.OptConfig, key,
+                     dtype=jnp.float32) -> TrainState:
+    from repro.models import init_params
+    params = init_params(model_cfg, key, dtype)
+    return TrainState(params=params, opt_state=opt.init(opt_cfg, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
+                    *, microbatches: int = 1, remat: bool = True,
+                    shard=None, scan_unroll: int | bool = 1,
+                    loss_chunk: int | None = None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).  ``batch``
+    leading dim must be divisible by ``microbatches``."""
+    shard_fn = shard if shard is not None else (lambda x, _n: x)
+
+    def loss_fn(params, mb):
+        loss, metrics = forward_train(model_cfg, params, mb,
+                                      shard=shard_fn, remat=remat,
+                                      scan_unroll=scan_unroll,
+                                      loss_chunk=loss_chunk)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def body(acc, mb):
+                acc_g, acc_l = acc
+                (loss, _m), g = grad_fn(state.params, mb)
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (acc0, jnp.zeros((), jnp.float32)), mbs,
+                unroll=(microbatches if scan_unroll is True else 1))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {"loss": loss}
+        new_params, new_opt, om = opt.apply(
+            opt_cfg, grads, state.opt_state, state.params, state.step)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return (TrainState(params=new_params, opt_state=new_opt,
+                           step=state.step + 1), metrics)
+
+    return train_step

@@ -1,0 +1,54 @@
+"""codec: 2-bit packing invariants (hypothesis property tests)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec
+
+dna = st.text(alphabet="ACGT", min_size=1, max_size=300)
+
+
+@given(dna)
+@settings(max_examples=50, deadline=None)
+def test_pack_roundtrip(s):
+    c = codec.encode_dna(s)
+    p = codec.pack_2bit(c)
+    u = codec.unpack_2bit(p, len(c))
+    assert (np.asarray(u) == c).all()
+
+
+@given(dna)
+@settings(max_examples=25, deadline=None)
+def test_word_order_is_lexicographic(s):
+    """Packing is big-endian: comparing the first packed word of two texts
+    equals comparing their first 16 bases lexicographically."""
+    c = codec.encode_dna(s)
+    other = np.roll(c, 1)
+    w1 = int(np.asarray(codec.pack_2bit(c))[0])
+    w2 = int(np.asarray(codec.pack_2bit(other))[0])
+    s1 = bytes(np.pad(c, (0, 16))[:16])
+    s2 = bytes(np.pad(other, (0, 16))[:16])
+    assert (w1 < w2) == (s1 < s2)
+    assert (w1 == w2) == (s1 == s2)
+
+
+@given(dna, st.integers(0, 400))
+@settings(max_examples=50, deadline=None)
+def test_extract_window(s, pos):
+    c = codec.encode_dna(s)
+    pos = pos % len(c)
+    p = codec.pack_2bit(c)
+    w = codec.extract_window(p, jnp.asarray([pos]), 2)[0]
+    want = codec.pack_2bit(np.pad(c[pos:], (0, 32))[:32])[:2]
+    assert (np.asarray(w) == np.asarray(want)).all()
+
+
+def test_encode_rejects_non_dna():
+    with pytest.raises(ValueError):
+        codec.encode_dna("ACGTX")
+
+
+def test_decode_inverse():
+    c = codec.random_dna(97, seed=3)
+    assert (codec.encode_dna(codec.decode_dna(c)) == c).all()

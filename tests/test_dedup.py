@@ -1,0 +1,56 @@
+"""Corpus dedup / contamination via the suffix-array index."""
+import numpy as np
+
+from repro.core import dedup
+from repro.core.codec import random_dna
+from repro.core.tablet import build_tablet_store
+from repro.data.pipeline import dedup_token_pool, dna_corpus
+
+
+def test_duplicate_span_detection():
+    base = random_dna(512, seed=2)
+    corpus = np.concatenate([base, random_dna(300, seed=9), base[:200]])
+    store = build_tablet_store(corpus, is_dna=True)
+    mask = np.asarray(dedup.duplicate_span_mask(store, 32))
+    assert mask[:150].all()                       # original block marked
+    assert mask[812:912].all()                    # copy marked
+    assert mask[560:740].mean() < 0.2             # unique middle unmarked
+
+
+def test_doc_filter():
+    base = random_dna(512, seed=2)
+    corpus = np.concatenate([base, random_dna(300, seed=9), base[:200]])
+    store = build_tablet_store(corpus, is_dna=True)
+    doc_ids = np.concatenate([np.zeros(512, int), np.ones(300, int),
+                              np.full(200, 2)])
+    keep = dedup.filter_duplicate_docs(store, doc_ids, 32, threshold=0.5)
+    assert keep[1] and not keep[2]
+
+
+def test_contamination_check():
+    rng = np.random.default_rng(0)
+    corpus = rng.integers(0, 1000, 2000).astype(np.int32)
+    store = build_tablet_store(corpus, is_dna=False)
+    in_corpus = corpus[500:508][None]
+    not_in = (corpus[500:508] + 1001)[None]        # tokens outside range
+    got = dedup.contamination_check(
+        store, np.concatenate([in_corpus, not_in % 2000]))
+    assert got[0]
+
+
+def test_planted_duplicate_fraction():
+    corpus = dna_corpus(4000, seed=1, dup_fraction=0.5)
+    store = build_tablet_store(corpus, is_dna=True)
+    frac = float(dedup.duplicate_fraction(store, 64))
+    assert frac > 0.4
+
+
+def test_dedup_token_pool():
+    rng = np.random.default_rng(3)
+    doc_a = rng.integers(0, 5000, 200).astype(np.int32)
+    doc_b = rng.integers(0, 5000, 200).astype(np.int32)
+    tokens = np.concatenate([doc_a, doc_b, doc_a])   # doc 2 duplicates doc 0
+    doc_ids = np.repeat([0, 1, 2], 200)
+    keep = dedup_token_pool(tokens, doc_ids, min_len=32)
+    assert keep[1]
+    assert not keep[2] or not keep[0]

@@ -1,0 +1,307 @@
+"""Multi-device behaviour (8 host devices via subprocess; smoke tests and
+benches must keep seeing 1 device, hence the isolation)."""
+import pytest
+
+
+def test_distributed_sorts(multidevice):
+    multidevice("""
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.core.dsort import bitonic_sort_sharded, sort_sharded_auto
+
+mesh = jax.make_mesh((8,), ('t',))
+for m, rng_max in [(64, 20), (256, 10**6)]:   # tie-heavy and near-unique
+    rng = np.random.default_rng(m)
+    keys = rng.integers(0, rng_max, size=(8*m,)).astype(np.int32)
+    vals = np.arange(8*m, dtype=np.int32)
+    for fn in (lambda o: bitonic_sort_sharded(o, num_keys=1, axis_name='t'),
+               lambda o: sort_sharded_auto(o, num_keys=1, axis_name='t')):
+        @partial(jax.shard_map, mesh=mesh, in_specs=(P('t'), P('t')),
+                 out_specs=(P('t'), P('t')))
+        def run(k, v):
+            return fn((k, v))
+        ks, vs = run(keys, vals)
+        vs = np.asarray(vs)
+        assert sorted(vs.tolist()) == list(range(8*m)), 'not a permutation'
+        assert (np.asarray(ks) == np.sort(keys)).all()
+        assert (keys[vs] == np.sort(keys)).all()
+print('OK')
+""")
+
+
+def test_distributed_suffix_array(multidevice):
+    multidevice("""
+import jax, numpy as np
+from repro.core.dsa import build_suffix_array_distributed
+from repro.core.suffix_array import suffix_array_naive
+from repro.core.codec import random_dna
+
+mesh = jax.make_mesh((8,), ('t',))
+for method in ['bitonic', 'sample']:
+    for n in [100, 777, 2048]:
+        codes = random_dna(n, seed=n)
+        sa, pad = build_suffix_array_distributed(codes, mesh, 't', method=method)
+        assert (np.asarray(sa)[pad:] == suffix_array_naive(codes)).all(), (method, n)
+print('OK')
+""")
+
+
+def test_distributed_scan_matches_local(multidevice):
+    multidevice("""
+import jax, numpy as np
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.core.tablet import build_tablet_store
+from repro.core import query as Q
+from repro.core.codec import random_dna
+
+mesh = jax.make_mesh((8,), ('t',))
+codes = random_dna(4096, seed=5)
+store = build_tablet_store(codes, num_tablets=8)
+pats = Q.random_patterns(64, 1, 10, seed=9)
+_, pp, pl = Q.encode_patterns(pats, 16)
+
+@partial(jax.shard_map, mesh=mesh, in_specs=(P('t'), None, P(), P()), out_specs=P())
+def dscan(sa_local, meta, patt, plen):
+    return Q.query_sharded(sa_local, meta, patt, plen, 't')
+
+res = dscan(store.sa, store, pp, pl)
+ref = Q.query(store, pp, pl)
+for f in ['count', 'found', 'first_pos', 'first_rank']:
+    assert (np.asarray(getattr(res, f)) == np.asarray(getattr(ref, f))).all(), f
+print('OK')
+""")
+
+
+def test_sharded_training_and_elastic_restore(multidevice, tmp_path):
+    """Train sharded on (2,4) mesh, checkpoint, restore on (8,1) mesh and on
+    1 device — elastic reshard-on-load."""
+    multidevice(f"""
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.training import OptConfig, make_train_step, train_state_init
+from repro.distributed import sharding as shd
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, synthetic_batch
+
+def ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+cfg = get_config('qwen3-0.6b').reduced()
+ocfg = OptConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+data = DataConfig(global_batch=8, seq_len=32)
+
+mesh_a = jax.make_mesh((2, 4), ('data', 'model'))
+state = train_state_init(cfg, ocfg, jax.random.PRNGKey(0))
+pspecs = shd.param_specs(state.params, mesh_a)
+sspecs = type(state)(params=pspecs,
+                     opt_state=shd.opt_state_specs(ocfg, state.params, pspecs),
+                     step=P())
+state = jax.device_put(state, ns(mesh_a, sspecs))
+step = jax.jit(make_train_step(cfg, ocfg, shard=shd.make_shard_fn(mesh_a)),
+               in_shardings=(ns(mesh_a, sspecs), None),
+               out_shardings=(ns(mesh_a, sspecs), None))
+for i in range(3):
+    state, m = step(state, synthetic_batch(cfg, data, i))
+mgr = CheckpointManager(r'{tmp_path}')
+mgr.save(3, state)
+
+# elastic restore onto a DIFFERENT mesh (8 x 1)
+mesh_b = jax.make_mesh((8, 1), ('data', 'model'))
+pspecs_b = shd.param_specs(state.params, mesh_b)
+sspecs_b = type(state)(params=pspecs_b,
+                       opt_state=shd.opt_state_specs(ocfg, state.params, pspecs_b),
+                       step=P())
+_, state_b, _ = mgr.restore_latest(state, ns(mesh_b, sspecs_b))
+step_b = jax.jit(make_train_step(cfg, ocfg, shard=shd.make_shard_fn(mesh_b)),
+                 in_shardings=(ns(mesh_b, sspecs_b), None),
+                 out_shardings=(ns(mesh_b, sspecs_b), None))
+state_b, m = step_b(state_b, synthetic_batch(cfg, data, 3))
+assert np.isfinite(float(m['loss']))
+
+# continue on mesh A too and compare one step: same math, diff mesh
+state_a2, m_a = step(state, synthetic_batch(cfg, data, 3))
+np.testing.assert_allclose(float(m['loss']), float(m_a['loss']), rtol=1e-4)
+print('OK')
+""")
+
+
+def test_pipeline_parallelism(multidevice):
+    multidevice("""
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.distributed.pipeline import pipeline_apply, stage_slice
+
+mesh = jax.make_mesh((4,), ('pp',))
+L, D = 8, 16
+rng = np.random.default_rng(0)
+Ws = np.asarray(rng.normal(size=(L, D, D)) * 0.5, np.float32)
+xm = np.asarray(rng.normal(size=(6, 4, D)), np.float32)
+
+def stage_fn(params, h):
+    out, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), h, params)
+    return out
+
+@partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()), out_specs=P())
+def run(Ws, xm):
+    return pipeline_apply(stage_fn, stage_slice(Ws, 'pp', L), xm, 'pp')
+
+out = np.asarray(run(Ws, xm))
+ref = xm
+for l in range(L):
+    ref = np.tanh(ref @ Ws[l])
+assert np.abs(out - ref).max() < 1e-5
+
+g_pp = jax.grad(lambda W, x: jnp.sum(run(W, x) ** 2))(jnp.asarray(Ws), jnp.asarray(xm))
+def loss_ref(W, x):
+    h = x
+    for l in range(L):
+        h = jnp.tanh(h @ W[l])
+    return jnp.sum(h ** 2)
+g_ref = jax.grad(loss_ref)(jnp.asarray(Ws), jnp.asarray(xm))
+assert np.abs(np.asarray(g_pp) - np.asarray(g_ref)).max() < 1e-4
+print('OK')
+""")
+
+
+def test_compressed_gradient_exchange(multidevice):
+    multidevice("""
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.distributed.compression import compressed_pmean
+
+mesh = jax.make_mesh((8,), ('pod',))
+rng = np.random.default_rng(0)
+vals = np.asarray(rng.normal(size=(8, 4096)), np.float32)
+
+@partial(jax.shard_map, mesh=mesh, in_specs=(P('pod'), P('pod')),
+         out_specs=(P('pod'), P('pod')))
+def cm(v, e):
+    m, ne = compressed_pmean(v[0], 'pod', e[0])
+    return m[None], ne[None]
+
+true_mean = vals.mean(0)
+err = np.zeros_like(vals)
+m, err = cm(vals, err)
+rel = np.abs(np.asarray(m)[0] - true_mean).max() / np.abs(true_mean).max()
+assert rel < 0.05, rel
+# error feedback: the residual carries exactly what was not transmitted
+assert np.abs(np.asarray(err)).max() > 0            # non-trivial
+# and across repeated steps of the SAME gradient the mean stays unbiased
+total = np.zeros_like(true_mean)
+err = np.zeros_like(vals)
+for _ in range(16):
+    m, err = cm(vals, err)
+    total += np.asarray(m)[0]
+rel = np.abs(total / 16 - true_mean).max() / np.abs(true_mean).max()
+assert rel < 0.01, rel
+print('OK')
+""")
+
+
+def test_int8_on_the_wire(multidevice):
+    """The compressed exchange must actually put s8 on the wire (HLO)."""
+    multidevice("""
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.distributed.compression import compressed_pmean
+
+mesh = jax.make_mesh((8,), ('pod',))
+@partial(jax.shard_map, mesh=mesh, in_specs=(P('pod'), P('pod')),
+         out_specs=(P('pod'), P('pod')))
+def cm(v, e):
+    m, ne = compressed_pmean(v[0], 'pod', e[0])
+    return m[None], ne[None]
+hlo = jax.jit(cm).lower(
+    jax.ShapeDtypeStruct((8, 4096), jnp.float32),
+    jax.ShapeDtypeStruct((8, 4096), jnp.float32)).compile().as_text()
+assert 'all-gather' in hlo
+import re
+s8_gathers = [l for l in hlo.splitlines()
+              if 'all-gather' in l and re.search(r's8\\[', l)]
+assert s8_gathers, 'int8 all-gather not found in HLO'
+print('OK')
+""")
+
+
+def test_routed_query_matches_broadcast(multidevice):
+    """Beyond-paper routed scan: exact on the non-saturated set, found/
+    first_pos always exact, -2 sentinel only for runs spanning >2 tablets."""
+    multidevice("""
+import jax, numpy as np
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.core.tablet import build_tablet_store
+from repro.core import query as Q
+from repro.core.codec import random_dna
+
+mesh = jax.make_mesh((8,), ('t',))
+for seed in [5, 6, 9]:
+    codes = random_dna(4096, seed=seed)
+    store = build_tablet_store(codes, num_tablets=8)
+    pats = Q.random_patterns(64, 1, 10, seed=seed + 100)
+    _, pp, pl = Q.encode_patterns(pats, 16)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P('t'), None, P('t'), P('t')), out_specs=P('t'))
+    def routed(sa_local, meta, patt, plen):
+        return Q.query_routed(sa_local, meta, patt, plen, 't')
+
+    res = routed(store.sa, store, pp, pl)
+    ref = Q.query(store, pp, pl)
+    cnt = np.asarray(res.count); rc = np.asarray(ref.count)
+    exact = cnt >= 0; ovf = cnt == -1
+    assert (cnt[exact] == rc[exact]).all()
+    assert (np.asarray(res.found)[~ovf] == np.asarray(ref.found)[~ovf]).all()
+    fp = np.asarray(res.first_pos); chk = exact & (cnt > 0)
+    assert (fp[chk] == np.asarray(ref.first_pos)[chk]).all()
+    # saturated sentinel only for genuinely huge runs
+    m = store.n_pad // 8
+    assert (rc[cnt == -2] >= 1).all()
+print('OK')
+""")
+
+
+def test_expert_parallel_moe_matches_xla_path(multidevice):
+    """The shard_map EP dispatch (EXPERIMENTS §Perf F3/F5) is numerically
+    identical to the single-device XLA MoE."""
+    multidevice("""
+import jax, numpy as np, jax.numpy as jnp, dataclasses
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.models.moe import init_moe, moe_ffn, ep_sharding
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'))
+cfg = get_config('deepseek-v3-671b').reduced()
+cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(8, 512, cfg.d_model)) * 0.3, jnp.float32)
+out_ref, aux_ref = moe_ffn(cfg, p, x)
+
+def f(p_, x_):
+    with ep_sharding(mesh):
+        return moe_ffn(cfg, p_, x_)
+
+pspec = {'router': P(), 'wi': P('model', ('data',), None),
+         'wg': P('model', ('data',), None), 'wo': P('model', None, ('data',)),
+         'shared': {'wi': P(('data',), 'model'), 'wg': P(('data',), 'model'),
+                    'wo': P('model', ('data',))}}
+pp = jax.device_put(p, jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                                    is_leaf=lambda z: isinstance(z, P)))
+xx = jax.device_put(x, NamedSharding(mesh, P(('data',), None, None)))
+out_ep, aux_ep = jax.jit(f)(pp, xx)
+assert float(jnp.abs(out_ep - out_ref).max()) < 5e-4
+assert abs(float(aux_ep) - float(aux_ref)) < 1e-4
+# gradients flow through the EP path
+g = jax.grad(lambda p_, x_: jnp.sum(f(p_, x_)[0] ** 2))(pp, xx)
+for leaf in jax.tree.leaves(g):
+    assert np.isfinite(np.asarray(leaf)).all()
+print('OK')
+""")

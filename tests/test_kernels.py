@@ -1,0 +1,73 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
+sweeps per kernel as required."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codec, query as Q
+from repro.core.codec import random_dna
+from repro.core.tablet import build_tablet_store
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [1, 15, 16, 17, 1000, 16384, 50001])
+def test_pack2bit_shapes(n):
+    c = random_dna(n, seed=n)
+    got = np.asarray(ops.pack2bit(c))
+    want = np.asarray(codec.pack_2bit(c))
+    assert got.shape == want.shape
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("src_dtype", [np.uint8, np.int32, np.uint32])
+def test_pack2bit_dtypes(src_dtype):
+    c = random_dna(4096, seed=0).astype(src_dtype)
+    got = np.asarray(ops.pack2bit(c))
+    want = np.asarray(codec.pack_2bit(c.astype(np.uint8)))
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("B,W,text_n", [
+    (1, 1, 64), (7, 2, 500), (300, 7, 3000), (512, 8, 3000), (1000, 4, 777),
+])
+def test_pattern_compare_sweep(B, W, text_n):
+    codes = random_dna(text_n, seed=B)
+    packed = codec.pack_2bit(codes)
+    rng = np.random.default_rng(W)
+    pos = rng.integers(0, text_n, size=B).astype(np.int32)
+    pats = Q.random_patterns(B, 1, W * 16, seed=(B, W))
+    _, pp, pl = Q.encode_patterns(pats, W * 16)
+    win = codec.extract_window(packed, jnp.asarray(pos), W)
+    lt, le, eq = ops.pattern_compare(win, pp, pl, jnp.asarray(pos),
+                                     n_real=text_n)
+    rlt, rle, req = ref.pattern_compare_ref(win.T, pp.T, pl,
+                                            jnp.asarray(pos), n_real=text_n)
+    np.testing.assert_array_equal(np.asarray(lt), np.asarray(rlt, bool))
+    np.testing.assert_array_equal(np.asarray(le), np.asarray(rle, bool))
+    np.testing.assert_array_equal(np.asarray(eq), np.asarray(req, bool))
+    # cross-check against the core compare
+    clt, ceq = Q.compare_packed(packed, text_n, jnp.asarray(pos), pp, pl)
+    np.testing.assert_array_equal(np.asarray(lt), np.asarray(clt))
+    np.testing.assert_array_equal(np.asarray(eq), np.asarray(ceq))
+
+
+@pytest.mark.parametrize("nq,text_n", [(16, 512), (150, 2000), (260, 4096)])
+def test_tablet_scan_matches_query_engine(nq, text_n):
+    codes = random_dna(text_n, seed=text_n)
+    store = build_tablet_store(codes)
+    W = 7
+    pats = Q.random_patterns(nq, 1, 12, seed=nq)
+    _, pp, pl = Q.encode_patterns(pats, W * 16)
+    windows = codec.extract_window(store.text_packed, store.sa, W)
+    count, less, first = ops.tablet_scan(pp, pl, windows, store.sa,
+                                         n_real=store.n_real)
+    res = Q.query(store, pp, pl)
+    np.testing.assert_array_equal(np.asarray(count), np.asarray(res.count))
+    f = np.asarray(res.found)
+    lb = np.asarray(res.first_rank) + store.pad_count
+    np.testing.assert_array_equal(np.asarray(less)[f], lb[f])
+    rc, rl, rf = ref.tablet_scan_ref(pp.T, pl, windows.T, store.sa,
+                                     n_real=store.n_real)
+    np.testing.assert_array_equal(np.asarray(count), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(less), np.asarray(rl))
+    np.testing.assert_array_equal(np.asarray(first), np.asarray(rf))

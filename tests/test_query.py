@@ -1,0 +1,84 @@
+"""Query engine vs the paper's Algorithm 1 brute force (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec, query as Q
+from repro.core.tablet import build_tablet_store
+
+
+def _store(text):
+    return build_tablet_store(codec.encode_dna(text), is_dna=True)
+
+
+@given(st.text(alphabet="ACGT", min_size=4, max_size=200),
+       st.lists(st.text(alphabet="ACGT", min_size=1, max_size=12),
+                min_size=1, max_size=16))
+@settings(max_examples=30, deadline=None)
+def test_counts_match_brute_force(text, patterns):
+    store = _store(text)
+    codes = codec.encode_dna(text)
+    pc, pp, pl = Q.encode_patterns(patterns, 16)
+    res = Q.query(store, pp, pl)
+    for i, p in enumerate(patterns):
+        want_count, want_first = Q.brute_force_count(
+            codes, codec.encode_dna(p))
+        assert int(res.count[i]) == want_count, (text, p)
+        assert bool(res.found[i]) == (want_count > 0)
+        if want_count:
+            fp = int(res.first_pos[i])
+            assert (codes[fp:fp + len(p)] == codec.encode_dna(p)).all()
+
+
+@given(st.text(alphabet="ACGT", min_size=4, max_size=100))
+@settings(max_examples=20, deadline=None)
+def test_packed_and_codes_paths_agree(text):
+    store = _store(text)
+    pats = Q.random_patterns(32, 1, 10, seed=1)
+    pc, pp, pl = Q.encode_patterns(pats, 16)
+    r1 = Q.query(store, pp, pl)     # packed fast path
+    r2 = Q.query(store, pc, pl)     # generic token path
+    assert (np.asarray(r1.count) == np.asarray(r2.count)).all()
+    assert (np.asarray(r1.first_pos) == np.asarray(r2.first_pos)).all()
+
+
+def test_boundary_cases():
+    """Suffix shorter than pattern, all-A patterns vs padding, exact end."""
+    text = "GATTACA"
+    store = _store(text)
+    cases = {
+        "A": 3, "CA": 1, "ACA": 1, "GATTACA": 1, "GATTACAA": 0,
+        "AA": 0,            # would falsely match zero-padding if unguarded
+        "CAA": 0, "TACA": 1, "G": 1, "TT": 1, "TTT": 0,
+    }
+    pc, pp, pl = Q.encode_patterns(list(cases), 16)
+    res = Q.query(store, pp, pl)
+    for i, (p, want) in enumerate(cases.items()):
+        assert int(res.count[i]) == want, (p, int(res.count[i]), want)
+
+
+def test_first_pos_is_lexicographic_rank_order():
+    """first_pos is the match whose suffix is lexicographically smallest;
+    first_rank indexes the real (unpadded) suffix array."""
+    text = "ACGTACGTACGT"
+    store = _store(text)
+    pc, pp, pl = Q.encode_patterns(["ACGT"], 16)
+    res = Q.query(store, pp, pl)
+    assert int(res.count[0]) == 3
+    # suffixes starting with ACGT: positions 0,4,8; smallest suffix = "ACGT"
+    # at position 8 (shortest)
+    assert int(res.first_pos[0]) == 8
+    sa_real = np.asarray(store.sa)[store.pad_count:]
+    assert sa_real[int(res.first_rank[0])] == 8
+
+
+def test_token_corpus_queries():
+    """Large-vocab token path (the LM dedup/contamination use)."""
+    rng = np.random.default_rng(0)
+    corpus = rng.integers(0, 50000, 3000).astype(np.int32)
+    corpus[1000:1010] = corpus[2000:2010]      # planted duplicate 10-gram
+    store = build_tablet_store(corpus, is_dna=False)
+    w = corpus[2000:2010][None, :]
+    res = Q.query(store, jnp.asarray(w), jnp.asarray([10]))
+    assert int(res.count[0]) == 2

@@ -1,0 +1,75 @@
+"""Suffix-array construction: JAX prefix doubling vs the naive oracle."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec
+from repro.core.suffix_array import (adjacent_lcp, build_suffix_array,
+                                     rank_array, suffix_array_naive)
+
+
+def test_paper_mississippi_example():
+    """Paper §III: the MISSISSIPPI ordered-suffix table."""
+    text = "MISSISSIPPI"
+    codes = np.frombuffer(text.encode(), dtype=np.uint8)
+    sa = np.asarray(build_suffix_array(codes))
+    suffixes = [text[i:] for i in sa]
+    assert suffixes == sorted(text[i:] for i in range(len(text)))
+    assert suffixes[0] == "I"
+    assert suffixes[-1] == "SSISSIPPI"
+
+
+@given(st.text(alphabet="ACGT", min_size=1, max_size=200))
+@settings(max_examples=40, deadline=None)
+def test_matches_oracle(s):
+    codes = codec.encode_dna(s)
+    sa = np.asarray(build_suffix_array(codes))
+    assert (sa == suffix_array_naive(codes)).all()
+
+
+@given(st.lists(st.integers(0, 50000), min_size=2, max_size=100))
+@settings(max_examples=25, deadline=None)
+def test_generic_alphabet(tokens):
+    """Token corpora (large vocab) sort identically."""
+    codes = np.asarray(tokens, np.int32)
+    sa = np.asarray(build_suffix_array(codes))
+    assert (sa == suffix_array_naive(codes)).all()
+
+
+@given(st.text(alphabet="ACGT", min_size=2, max_size=120))
+@settings(max_examples=25, deadline=None)
+def test_sa_is_permutation_and_sorted(s):
+    """Invariants: SA is a permutation; suffixes strictly increasing."""
+    codes = codec.encode_dna(s)
+    sa = np.asarray(build_suffix_array(codes))
+    n = len(codes)
+    assert sorted(sa.tolist()) == list(range(n))
+    b = codes.tobytes()
+    for i in range(n - 1):
+        assert b[sa[i]:] < b[sa[i + 1]:]
+
+
+def test_rank_is_inverse():
+    codes = codec.random_dna(500, seed=1)
+    sa = build_suffix_array(codes)
+    rank = np.asarray(rank_array(sa))
+    sa = np.asarray(sa)
+    assert (rank[sa] == np.arange(500)).all()
+
+
+@given(st.text(alphabet="ACG", min_size=2, max_size=80),
+       st.integers(1, 16))
+@settings(max_examples=25, deadline=None)
+def test_adjacent_lcp(s, cap):
+    codes = codec.encode_dna(s)
+    sa = build_suffix_array(codes)
+    lcp = np.asarray(adjacent_lcp(jnp.asarray(codes, jnp.int32), sa, cap))
+    sa = np.asarray(sa)
+    n = len(codes)
+    for i in range(n - 1):
+        a, b = sa[i], sa[i + 1]
+        true = 0
+        while (a + true < n and b + true < n
+               and codes[a + true] == codes[b + true] and true < cap):
+            true += 1
+        assert lcp[i] == true

@@ -1,0 +1,87 @@
+"""End-to-end behaviour of the whole system (paper pipeline + LM pipeline).
+
+1. Ingest DNA -> tablet store -> serve the paper's workload -> stats sane.
+2. Token corpus -> SA dedup filter -> train a reduced LM on the deduped
+   stream -> loss decreases -> checkpoint -> resume bitwise-identical.
+3. LM serving: greedy generation runs and is deterministic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import query as Q
+from repro.core.codec import random_dna
+from repro.core.tablet import build_tablet_store
+from repro.data import DataConfig, synthetic_batch
+from repro.data.pipeline import dedup_token_pool
+from repro.serving import HedgedScanService, greedy_generate
+from repro.training import OptConfig, make_train_step, train_state_init
+
+
+def test_paper_pipeline_end_to_end():
+    codes = random_dna(50_000, seed=3)
+    store = build_tablet_store(codes, is_dna=True)
+    svc = HedgedScanService(store)
+    stats = svc.run_workload(2000, batch=500, seed=5)
+    assert stats["n"] == 2000
+    assert 0.0 < stats["hit_rate"] < 0.3
+    assert stats["corr_len_outcome"] < -0.2
+    # spot exactness
+    pats = Q.random_patterns(20, 1, 8, seed=11)
+    _, pp, pl = Q.encode_patterns(pats, 112)
+    res = Q.query(store, pp, pl)
+    for i, p in enumerate(pats):
+        from repro.core import codec
+        want, _ = Q.brute_force_count(codes, codec.encode_dna(p))
+        assert int(res.count[i]) == want
+
+
+def test_lm_pipeline_with_dedup_and_resume(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    rng = np.random.default_rng(0)
+    # document pool with a planted duplicate
+    docs = [rng.integers(0, 512, 100).astype(np.int32) for _ in range(5)]
+    docs.append(docs[0].copy())
+    tokens = np.concatenate(docs)
+    doc_ids = np.repeat(np.arange(6), 100)
+    keep = dedup_token_pool(tokens, doc_ids, min_len=32)
+    # exact-duplicate pairs are flagged on BOTH members (span symmetry);
+    # unique docs survive
+    assert not keep[0] and not keep[5]
+    assert keep[1:5].all()
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    ocfg = OptConfig(lr=1e-3, warmup_steps=1, total_steps=12)
+    state = train_state_init(cfg, ocfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, ocfg, remat=False))
+    data = DataConfig(global_batch=2, seq_len=32)
+    mgr = CheckpointManager(str(tmp_path))
+    losses = []
+    for i in range(8):
+        state, m = step(state, synthetic_batch(cfg, data, i))
+        losses.append(float(m["loss"]))
+        if i == 3:
+            mgr.save(4, state, extra={"data_step": 4})
+    assert losses[-1] < losses[1]
+
+    start, s2, _ = mgr.restore_latest(state)
+    for i in range(start, 8):
+        s2, m2 = step(s2, synthetic_batch(cfg, data, i))
+    np.testing.assert_allclose(float(m["loss"]), float(m2["loss"]),
+                               rtol=1e-6)
+
+
+def test_greedy_generation_deterministic():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = jax.device_put(
+        __import__("repro.models", fromlist=["init_params"]).init_params(
+            cfg, jax.random.PRNGKey(0)))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8)),
+        jnp.int32)}
+    out1 = np.asarray(greedy_generate(cfg, params, batch, 6))
+    out2 = np.asarray(greedy_generate(cfg, params, batch, 6))
+    assert out1.shape == (2, 6)
+    assert (out1 == out2).all()
+    assert (out1 >= 0).all() and (out1 < cfg.vocab_size).all()

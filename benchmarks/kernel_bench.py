@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.core import codec, query as Q
 from repro.core.codec import random_dna
+from repro.core.planner import ScanPlanner
 from repro.core.tablet import build_tablet_store
 
 
@@ -44,6 +45,19 @@ def bench_binary_search(B=1024):
     dt = _time(f, pp, pl)
     return dt / B * 1e6, {"scans_per_s": round(B / dt),
                           "rows": store.n_pad}
+
+
+def bench_planner_scan(B=1024):
+    """Planner entry point (single-device executor, jitted) — the path the
+    serving engine now takes; comparable to bench_binary_search."""
+    store = build_tablet_store(random_dna(1_000_000, seed=2), is_dna=True)
+    planner = ScanPlanner(store)
+    pats = Q.random_patterns(B, 1, 100, seed=3)
+    _, pp, pl = Q.encode_patterns(pats, 112)
+    dt = _time(lambda a, b: planner.scan_encoded(a, b), pp, pl)
+    return dt / B * 1e6, {"scans_per_s": round(B / dt),
+                          "rows": store.n_pad,
+                          "mode": planner.plan(B).mode}
 
 
 def bench_pack_throughput(n=4_000_000):

@@ -20,6 +20,7 @@ def main() -> None:
         ("fig1_latency_histogram", paper_tables.bench_histogram_fig1),
         ("kernel_pattern_compare", kernel_bench.bench_pattern_compare),
         ("kernel_binary_search_1M_rows", kernel_bench.bench_binary_search),
+        ("planner_scan_1M_rows", kernel_bench.bench_planner_scan),
         ("kernel_pack_2bit", kernel_bench.bench_pack_throughput),
     ]
     print("name,us_per_call,derived")

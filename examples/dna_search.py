@@ -9,7 +9,8 @@ import time
 
 import jax
 
-from repro.core.codec import random_dna
+from repro.core.codec import decode_dna, random_dna
+from repro.core.planner import ScanPlanner
 from repro.core.tablet import build_tablet_store
 from repro.serving import HedgedScanService
 
@@ -22,13 +23,14 @@ def main():
 
     print(f"[ingest] {args.text_len} bases (paper: chr1, 17 min on 2 VMs)")
     t0 = time.perf_counter()
-    store = build_tablet_store(random_dna(args.text_len, seed=0),
-                               is_dna=True)
+    codes = random_dna(args.text_len, seed=0)
+    store = build_tablet_store(codes, is_dna=True)
     jax.block_until_ready(store.sa)
     dt = time.perf_counter() - t0
     print(f"[ingest] {dt:.1f}s = {args.text_len / dt / 1e6:.2f} Mbase/s")
 
-    svc = HedgedScanService(store)
+    planner = ScanPlanner(store)
+    svc = HedgedScanService(store, planner=planner)
     # Table III: single process
     # batch=10: a sequential single-stream on CPU is dispatch-bound;
     # 10-wide batches keep the "single process" semantics at tractable cost
@@ -49,6 +51,14 @@ def main():
     h = svc.run_workload(args.queries, batch=50, hedged=True, seed=4)
     print(f"[hedged   ] max={h['max_ms']:.0f}ms p99={h['p99_ms']:.1f}ms "
           f"(single-read max was {s['max_ms']:.0f}ms)")
+    # Beyond-paper: match enumeration — the paper only reports the first
+    # match row; the planner's locate() gathers top-k positions per query
+    probe = decode_dna(codes[1000:1008])
+    out = planner.scan([probe], top_k=8)
+    hits = [int(x) for x in out.positions[0] if x >= 0]
+    print(f"[locate   ] {probe!r}: count={int(out.count[0])} "
+          f"positions={hits} (planted at 1000)")
+    assert 1000 in hits or int(out.count[0]) > 8
 
 
 if __name__ == "__main__":

@@ -1,5 +1,7 @@
 """Serving driver: batched scan requests against the tablet store — the
-paper's §V service shape, runnable end-to-end.
+paper's §V service shape, runnable end-to-end.  All scans go through the
+scan planner (repro.core.planner): broadcast/routed selection, sentinel
+retry, and top-k match enumeration.
 
     PYTHONPATH=src python examples/serve_queries.py
 """

@@ -1,0 +1,33 @@
+"""JAX version-compatibility shims.
+
+The repo targets the modern API (``jax.shard_map``, varying-mesh-axis
+tracking via ``lax.pcast``), but must also run on older jax releases where
+``shard_map`` still lives in ``jax.experimental.shard_map`` and VMA
+tracking does not exist.  Import from here instead of feature-detecting at
+call sites:
+
+    from repro.compat import shard_map, pcast_varying
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+        # old API tracks replication instead of varying-ness; its rep
+        # checker predates the collectives idioms used here, so disable it
+        return _shard_map_old(f, mesh, in_specs, out_specs, check_rep=False)
+
+
+def pcast_varying(x, axis_name):
+    """Mark ``x`` device-varying over ``axis_name`` (VMA tracking).  On old
+    jax there is no VMA system and the value is returned unchanged."""
+    pcast = getattr(lax, "pcast", None)
+    if pcast is None:
+        return x
+    return pcast(x, axis_name, to="varying")

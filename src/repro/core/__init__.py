@@ -1,14 +1,17 @@
 """repro.core — the paper's contribution: a tablet-sharded suffix-array
 engine (construction, storage, scan) in JAX.  See DESIGN.md."""
-from repro.core import codec, dedup, dsa, dsort, query, suffix_array, tablet
+from repro.core import codec, dedup, dsa, dsort, planner, query, \
+    suffix_array, tablet
+from repro.core.planner import ScanOutcome, ScanPlan, ScanPlanner
 from repro.core.query import MatchResult, encode_patterns, query as scan, \
     query_sharded as scan_sharded, random_patterns
 from repro.core.suffix_array import build_suffix_array, suffix_array_naive
 from repro.core.tablet import TabletStore, build_tablet_store
 
 __all__ = [
-    "MatchResult", "TabletStore", "build_suffix_array", "build_tablet_store",
-    "codec", "dedup", "dsa", "dsort", "encode_patterns", "query",
+    "MatchResult", "ScanOutcome", "ScanPlan", "ScanPlanner", "TabletStore",
+    "build_suffix_array", "build_tablet_store", "codec", "dedup", "dsa",
+    "dsort", "encode_patterns", "planner", "query",
     "random_patterns", "scan", "scan_sharded", "suffix_array",
     "suffix_array_naive", "tablet",
 ]

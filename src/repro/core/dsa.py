@@ -23,6 +23,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.dsort import (bitonic_sort_sharded, sample_sort_sharded,
                               sort_sharded_auto)
 
@@ -128,7 +129,7 @@ def build_suffix_array_distributed(codes: np.ndarray, mesh, axis_name: str,
     fn = functools.partial(build_suffix_array_sharded, n_real=n_real,
                            axis_name=axis_name, method=method)
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(spec,),
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(spec,),
                        out_specs=(spec, spec))
     def run(c):
         return fn(c)

@@ -1,0 +1,407 @@
+"""Scan planner — the single entry point for all pattern lookups.
+
+The store exposes three scan implementations (`repro.core.query`):
+
+* ``query``          — single-device batched binary search;
+* ``query_sharded``  — broadcast fan-out: every tablet searches its local
+  rows for every query, bounds are psum'd (paper-faithful Accumulo scan);
+* ``query_routed``   — each query travels to its owner tablet through a
+  fixed-capacity all_to_all (MoE-dispatch shape).  Cheaper per device but
+  *partial*: it returns sentinel counts that callers must handle.
+
+Sentinel semantics (``MatchResult.count`` from the routed path):
+
+====== =====================================================================
+value  meaning
+====== =====================================================================
+``>0``   exact occurrence count
+``0``    exact: no match
+``-1``   dispatch overflow — a hot tablet received more queries than its
+         capacity slots; the query was never executed.  ``found`` is False
+         but unreliable.
+``-2``   saturated run — the match run spans more than two tablets (very
+         short pattern); ``found``/``first_pos`` are exact, the count is not.
+====== =====================================================================
+
+The planner makes those sentinels invisible: any query coming back with a
+negative count is transparently re-executed through an exact path
+(broadcast when a mesh is live, single-device otherwise), so **callers
+always get exact counts**.  This is the retry guarantee tested against
+``brute_force_count`` in ``tests/test_planner.py`` and
+``tests/test_distributed.py``.
+
+On top of the exact scan the planner adds:
+
+* :meth:`ScanPlanner.locate` — match *enumeration*: up to ``top_k``
+  occurrence positions per query, gathered from the SA slice ``[lb, ub)``
+  (previously only ``first_pos`` was exposed);
+* an LRU result cache for repeated hot patterns (string-level API);
+* :meth:`ScanPlanner.plan` — mode selection from mesh shape and batch
+  size, overridable per call for benchmarking.
+
+See ``docs/scan_planner.md`` for the full contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import shard_map
+from repro.core import codec
+from repro.core import query as Q
+from repro.core.query import MatchResult
+from repro.core.tablet import TabletStore
+
+MODE_SINGLE = "single"
+MODE_BROADCAST = "broadcast"
+MODE_ROUTED = "routed"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanPlan:
+    """One planning decision: which executor a batch will run through."""
+    mode: str      # MODE_SINGLE | MODE_BROADCAST | MODE_ROUTED
+    reason: str
+    batch: int
+
+
+@dataclasses.dataclass
+class PlannerStats:
+    """Counters for observability; reset with :meth:`ScanPlanner.reset_stats`."""
+    batches: int = 0
+    queries: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    retried_overflow: int = 0     # -1 sentinels re-executed
+    retried_saturated: int = 0    # -2 sentinels re-executed
+    retried_inexact_rank: int = 0  # found but first_rank < 0 (defensive)
+    mode_counts: dict = dataclasses.field(
+        default_factory=lambda: {MODE_SINGLE: 0, MODE_BROADCAST: 0,
+                                 MODE_ROUTED: 0})
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["mode_counts"] = dict(self.mode_counts)
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanOutcome:
+    """Host-side result of a string-level scan: exact counts always.
+
+    ``positions`` is present when ``top_k > 0``: shape (B, top_k) int32,
+    row i holding up to ``min(count[i], top_k)`` occurrence positions in
+    suffix-rank order (lexicographically smallest matching suffix first),
+    padded with -1.
+    """
+    found: np.ndarray        # (B,)  bool
+    count: np.ndarray        # (B,)  int64
+    first_pos: np.ndarray    # (B,)  int64
+    positions: Optional[np.ndarray] = None   # (B, top_k) int64 | None
+
+
+class ScanPlanner:
+    """Plans, executes, retries, and caches pattern scans over a store.
+
+    Parameters
+    ----------
+    store:
+        The tablet store (full replicated SA + text).
+    mesh, axis_name:
+        Optional 1-D jax mesh over tablets.  When absent (or 1 device),
+        every scan runs the single-device path.
+    capacity_factor:
+        Dispatch capacity for the routed path (MoE-style); lower values
+        save bandwidth but overflow hot tablets more often — overflow is
+        corrected by the retry pass, trading latency for exactness.
+    routed_min_batch:
+        Batches at least this large prefer the routed path (per-device
+        work O(B/p log m) instead of O(B log m)); smaller batches
+        broadcast.  The routed path also requires a DNA store and a batch
+        divisible into the mesh (the planner pads internally).
+    cache_size:
+        LRU entries for the string-level API (0 disables caching).
+    """
+
+    def __init__(self, store: TabletStore, *, mesh=None,
+                 axis_name: str = "tablets", capacity_factor: float = 2.0,
+                 routed_min_batch: int = 64, cache_size: int = 4096,
+                 max_pattern_len: Optional[int] = None):
+        self.store = store
+        self.mesh = mesh
+        self.axis_name = axis_name
+        if mesh is not None:
+            p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+            if store.n_pad % p != 0:
+                raise ValueError(
+                    f"store.n_pad={store.n_pad} is not divisible by the "
+                    f"mesh's {p} tablets — rebuild the store with "
+                    f"num_tablets={p} (build_tablet_store)")
+        self.capacity_factor = float(capacity_factor)
+        self.routed_min_batch = int(routed_min_batch)
+        self.cache_size = int(cache_size)
+        self.max_pattern_len = int(max_pattern_len or store.max_query_len)
+        self.stats = PlannerStats()
+        self._cache: OrderedDict[tuple, tuple] = OrderedDict()
+        self._sa_host: Optional[np.ndarray] = None
+        # executors are built lazily and injectable for tests: each maps
+        # (patt, plen) -> MatchResult
+        self._executors: dict[str, Callable] = {}
+
+    # -- planning -----------------------------------------------------------
+    @property
+    def num_tablets(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.mesh.axis_names]))
+
+    def plan(self, batch: int) -> ScanPlan:
+        """Pick the executor for a batch of ``batch`` queries."""
+        p = self.num_tablets
+        if p <= 1:
+            return ScanPlan(MODE_SINGLE, "no mesh / single device", batch)
+        if (self.store.is_dna and batch >= max(self.routed_min_batch, p)):
+            return ScanPlan(
+                MODE_ROUTED,
+                f"batch {batch} >= {self.routed_min_batch} on {p} tablets: "
+                f"route queries to owners", batch)
+        return ScanPlan(MODE_BROADCAST,
+                        f"small batch ({batch}) or non-DNA store: "
+                        f"broadcast to all {p} tablets", batch)
+
+    # -- executors ----------------------------------------------------------
+    def _executor(self, mode: str) -> Callable:
+        fn = self._executors.get(mode)
+        if fn is None:
+            fn = self._build_executor(mode)
+            self._executors[mode] = fn
+        return fn
+
+    def _build_executor(self, mode: str) -> Callable:
+        store = self.store
+        if mode == MODE_SINGLE:
+            return jax.jit(lambda patt, plen: Q.query(store, patt, plen))
+
+        from jax.sharding import PartitionSpec as P
+        ax = self.axis_name
+        if mode == MODE_BROADCAST:
+            @jax.jit
+            @partial(shard_map, mesh=self.mesh,
+                     in_specs=(P(ax), None, P(), P()), out_specs=P())
+            def broadcast(sa_local, meta, patt, plen):
+                return Q.query_sharded(sa_local, meta, patt, plen, ax)
+
+            return lambda patt, plen: broadcast(store.sa, store, patt, plen)
+
+        if mode == MODE_ROUTED:
+            cf = self.capacity_factor
+
+            @jax.jit
+            @partial(shard_map, mesh=self.mesh,
+                     in_specs=(P(ax), None, P(ax), P(ax)), out_specs=P(ax))
+            def routed(sa_local, meta, patt, plen):
+                return Q.query_routed(sa_local, meta, patt, plen, ax,
+                                      capacity_factor=cf)
+
+            def run(patt, plen):
+                # routed shards the query batch: pad B to a multiple of p
+                p = self.num_tablets
+                B = patt.shape[0]
+                pad = (-B) % p
+                if pad:
+                    patt = jnp.concatenate(
+                        [patt, jnp.zeros((pad,) + patt.shape[1:],
+                                         patt.dtype)])
+                    plen = jnp.concatenate(
+                        [plen, jnp.ones((pad,), plen.dtype)])
+                res = routed(store.sa, store, patt, plen)
+                if pad:
+                    res = MatchResult(found=res.found[:B],
+                                      count=res.count[:B],
+                                      first_rank=res.first_rank[:B],
+                                      first_pos=res.first_pos[:B])
+                return res
+
+            return run
+
+        raise ValueError(f"unknown scan mode {mode!r}")
+
+    def _exact_mode(self) -> str:
+        return MODE_SINGLE if self.num_tablets <= 1 else MODE_BROADCAST
+
+    # -- encoded-batch API --------------------------------------------------
+    def scan_encoded(self, patt, plen, *, mode: Optional[str] = None,
+                     retry: bool = True) -> MatchResult:
+        """Exact scan of an encoded batch (packed uint32 DNA or int32 codes).
+
+        Selects the executor via :meth:`plan` (or ``mode`` when forced),
+        then re-executes any query whose routed count came back negative
+        (-1 overflow / -2 saturated) through the exact path.  With
+        ``retry=False`` the raw sentinels are returned (benchmarks only).
+        """
+        B = int(patt.shape[0])
+        chosen = mode or self.plan(B).mode
+        if chosen not in (MODE_SINGLE, MODE_BROADCAST, MODE_ROUTED):
+            raise ValueError(f"unknown scan mode {chosen!r}")
+        if (chosen != MODE_SINGLE and self.mesh is None
+                and chosen not in self._executors):  # injected fakes are ok
+            raise ValueError(
+                f"mode {chosen!r} requires a mesh; this planner has none")
+        self.stats.batches += 1
+        self.stats.queries += B
+        self.stats.mode_counts[chosen] += 1
+        if B == 0:
+            z = jnp.zeros((0,), jnp.int32)
+            return MatchResult(found=z.astype(bool), count=z,
+                               first_rank=z, first_pos=z)
+        res = self._executor(chosen)(patt, plen)
+        if chosen != MODE_ROUTED or not retry:
+            return res
+
+        count = np.asarray(res.count)
+        # retry negative sentinels, plus any row claiming a match without a
+        # usable rank (defensive: rank feeds locate()'s SA-slice gather)
+        rank_bad = (count > 0) & (np.asarray(res.first_rank) < 0)
+        bad = np.flatnonzero((count < 0) | rank_bad)
+        if bad.size == 0:
+            return res
+        self.stats.retried_overflow += int((count[bad] == -1).sum())
+        self.stats.retried_saturated += int((count[bad] == -2).sum())
+        self.stats.retried_inexact_rank += int(rank_bad.sum())
+        # pad the retry batch to a power-of-two bucket: its size varies
+        # per batch, and the jitted exact executor recompiles per shape —
+        # bucketing bounds that to log2(B) compilations
+        n_bad = int(bad.size)
+        bucket = 1 << (n_bad - 1).bit_length() if n_bad > 1 else 1
+        take = np.concatenate(
+            [bad, np.full(bucket - n_bad, bad[0], bad.dtype)])
+        sub = self._executor(self._exact_mode())(
+            jnp.asarray(np.asarray(patt)[take]),
+            jnp.asarray(np.asarray(plen)[take]))
+        sub = MatchResult(found=sub.found[:n_bad], count=sub.count[:n_bad],
+                          first_rank=sub.first_rank[:n_bad],
+                          first_pos=sub.first_pos[:n_bad])
+        found = np.asarray(res.found).copy()
+        first_rank = np.asarray(res.first_rank).copy()
+        first_pos = np.asarray(res.first_pos).copy()
+        count = count.copy()
+        found[bad] = np.asarray(sub.found)
+        count[bad] = np.asarray(sub.count)
+        first_rank[bad] = np.asarray(sub.first_rank)
+        first_pos[bad] = np.asarray(sub.first_pos)
+        return MatchResult(found=jnp.asarray(found), count=jnp.asarray(count),
+                           first_rank=jnp.asarray(first_rank),
+                           first_pos=jnp.asarray(first_pos))
+
+    # -- match enumeration --------------------------------------------------
+    def _sa(self) -> np.ndarray:
+        if self._sa_host is None:
+            self._sa_host = np.asarray(self.store.sa)
+        return self._sa_host
+
+    def locate_encoded(self, patt, plen, top_k: int = 8,
+                       *, mode: Optional[str] = None) -> np.ndarray:
+        """Up to ``top_k`` occurrence positions per query, (B, top_k) int.
+
+        Positions come from the SA slice ``[lb, lb + min(count, top_k))``
+        — suffix-rank order, so position j is the start of the (j+1)-th
+        lexicographically smallest matching suffix.  Rows are padded with
+        -1 past ``count``.
+        """
+        res = self.scan_encoded(patt, plen, mode=mode)
+        return self.positions_from_result(res, top_k)
+
+    def positions_from_result(self, res: MatchResult,
+                              top_k: int = 8) -> np.ndarray:
+        """Enumerate positions for an already-exact MatchResult."""
+        sa = self._sa()
+        count = np.asarray(res.count)
+        found = np.asarray(res.found)
+        first_rank = np.asarray(res.first_rank)
+        lb = first_rank + self.store.pad_count        # global SA row of lb
+        k = np.arange(max(int(top_k), 1))[None, :]
+        idx = lb[:, None] + k
+        # a row without a usable rank cannot be enumerated — never emit
+        # garbage SA gathers (scan_encoded's retry makes this unreachable
+        # for its callers, but the method is public)
+        valid = (found & (first_rank >= 0))[:, None] & (k < count[:, None])
+        idx = np.clip(idx, 0, sa.shape[0] - 1)
+        return np.where(valid, sa[idx], -1)[:, :top_k].astype(np.int64)
+
+    # -- string-level API with LRU cache ------------------------------------
+    def _encode(self, patterns: list[str]):
+        max_len = codec.packed_length(self.max_pattern_len) * codec.BASES_PER_WORD
+        codes, packed, lengths = Q.encode_patterns(patterns, max_len)
+        if self.store.is_dna:
+            return packed, lengths
+        return codes, lengths
+
+    def scan(self, patterns: list[str], top_k: int = 0) -> ScanOutcome:
+        """Scan a batch of pattern strings; exact counts, optional
+        enumeration, LRU-cached per (pattern, top_k)."""
+        B = len(patterns)
+        count = np.full(B, -1, np.int64)
+        first_pos = np.full(B, -1, np.int64)
+        positions = (np.full((B, top_k), -1, np.int64) if top_k else None)
+        miss_idx: list[int] = []
+        for i, pat in enumerate(patterns):
+            hit = self._cache_get((pat, top_k))
+            if hit is not None:
+                count[i], first_pos[i] = hit[0], hit[1]
+                if top_k:
+                    positions[i] = hit[2]
+            else:
+                miss_idx.append(i)
+        self.stats.cache_hits += B - len(miss_idx)
+        self.stats.cache_misses += len(miss_idx)
+
+        if miss_idx:
+            patt, plen = self._encode([patterns[i] for i in miss_idx])
+            res = self.scan_encoded(patt, plen)
+            sub_count = np.asarray(res.count)
+            sub_first = np.asarray(res.first_pos)
+            sub_pos = (self.positions_from_result(res, top_k)
+                       if top_k else None)
+            for j, i in enumerate(miss_idx):
+                count[i] = sub_count[j]
+                first_pos[i] = sub_first[j]
+                row = sub_pos[j] if top_k else None
+                if top_k:
+                    positions[i] = row
+                self._cache_put((patterns[i], top_k),
+                                (int(sub_count[j]), int(sub_first[j]), row))
+        return ScanOutcome(found=count > 0, count=count,
+                           first_pos=first_pos, positions=positions)
+
+    def locate(self, patterns: list[str], top_k: int = 8) -> np.ndarray:
+        """String-level enumeration: (B, top_k) positions, -1 padded."""
+        return self.scan(patterns, top_k=top_k).positions
+
+    # -- cache plumbing ------------------------------------------------------
+    def _cache_get(self, key):
+        if self.cache_size <= 0:
+            return None
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+        return hit
+
+    def _cache_put(self, key, value):
+        if self.cache_size <= 0:
+            return
+        self._cache[key] = value
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+
+    def reset_stats(self) -> None:
+        self.stats = PlannerStats()

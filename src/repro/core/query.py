@@ -10,6 +10,12 @@ Distributed mode mirrors an Accumulo scan fan-out: every tablet performs
 the search on its local rows; because lower/upper bounds are ADDITIVE over
 contiguous tablets, the global bound is a single ``psum`` — one scalar per
 query crosses the wire, not rows (DESIGN.md §2).
+
+Callers should not pick between ``query`` / ``query_sharded`` /
+``query_routed`` directly: ``repro.core.planner.ScanPlanner`` selects the
+execution mode, retries the routed path's sentinel counts (-1 dispatch
+overflow, -2 saturated run — see ``query_routed``) to exact values, and
+adds match enumeration + caching.  See docs/scan_planner.md.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.compat import pcast_varying
 from repro.core import codec
 from repro.core.tablet import TabletStore
 
@@ -47,11 +54,19 @@ def encode_patterns(patterns: list[str], max_len: int):
     packed (B, W) uint32, lengths (B,) int32)."""
     B = len(patterns)
     lengths = np.array([len(p) for p in patterns], np.int32)
-    assert lengths.max(initial=0) <= max_len
+    assert lengths.max(initial=0) <= max_len, (
+        f"pattern length {int(lengths.max(initial=0))} exceeds "
+        f"max_len={max_len}")
+    W = codec.packed_length(max_len)
+    if B == 0:
+        # empty batches occur naturally (e.g. a retry pass with nothing to
+        # retry, or a fully cache-served planner batch) — np.stack([]) raises
+        return (jnp.zeros((0, max_len), jnp.int32),
+                jnp.zeros((0, W), jnp.uint32),
+                jnp.zeros((0,), jnp.int32))
     codes = np.zeros((B, max_len), np.int32)
     for i, p in enumerate(patterns):
         codes[i, : len(p)] = codec.encode_dna(p)
-    W = codec.packed_length(max_len)
     packed = np.stack([np.asarray(codec.pack_2bit(c)) for c in codes])
     return jnp.asarray(codes), jnp.asarray(packed[:, :W]), jnp.asarray(lengths)
 
@@ -156,8 +171,8 @@ def _bounded_search(sa: jnp.ndarray, pred_fn, batch: int, n_rows: int,
     lo = jnp.zeros((batch,), jnp.int32)
     hi = jnp.full((batch,), n_rows, jnp.int32)
     if varying_axis is not None:
-        lo = lax.pcast(lo, varying_axis, to="varying")
-        hi = lax.pcast(hi, varying_axis, to="varying")
+        lo = pcast_varying(lo, varying_axis)
+        hi = pcast_varying(hi, varying_axis)
     lo, _ = lax.fori_loop(0, steps, body, (lo, hi))
     return lo
 
@@ -342,8 +357,16 @@ def query_routed(sa_local: jnp.ndarray, store_meta: TabletStore,
         jnp.where(nb_cnt > 0, jnp.take(sa_local,
                                        jnp.clip(nb_lb, 0, m - 1)), -1),
         axis_name, perm_left)
+    # global SA row of the neighbour's run start (for first_rank when the
+    # whole run lives in the neighbour: a match starting exactly at the
+    # tablet boundary leaves the owner's local run empty)
+    spill_rank = lax.ppermute(
+        jnp.where(nb_cnt > 0,
+                  d * m + nb_lb - (store_meta.n_pad - store_meta.n_real),
+                  -1), axis_name, perm_left)
     cnt = jnp.where(spill_possible, cnt + spill_cnt, cnt)
     fpos = jnp.where((cnt > 0) & (fpos < 0), spill_first, fpos)
+    frank = jnp.where((cnt > 0) & (frank < 0), spill_rank, frank)
     # match run crosses >2 tablets (very short pattern): exact count needs
     # the broadcast path — flag with -2 (found stays exact: run nonempty)
     saturated = spill_possible & spill_sat

@@ -1,7 +1,8 @@
 """Serving launcher — the paper's workload end-to-end.
 
 Builds a tablet store over a synthetic DNA corpus (distributed construction
-when >1 device), then serves batched random-pattern scans and prints the
+when >1 device), then serves batched random-pattern scans through the scan
+planner (single / broadcast / routed+retry selection) and prints the
 paper's Table III/IV statistics, with and without hedged reads.
 
     PYTHONPATH=src python -m repro.launch.serve --text-len 200000 \
@@ -13,10 +14,11 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.core.codec import random_dna
+from repro.core.planner import ScanPlanner
 from repro.core.tablet import build_tablet_store
+from repro.launch.mesh import make_tablet_mesh
 from repro.serving import HedgedScanService
 
 
@@ -27,18 +29,26 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--max-pattern", type=int, default=100)
     ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--capacity-factor", type=float, default=2.0)
+    ap.add_argument("--top-k", type=int, default=5,
+                    help="positions per query in the locate demo")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    print(f"[build] suffix array over {args.text_len} bases ...", flush=True)
+    n_dev = len(jax.devices())
+    print(f"[build] suffix array over {args.text_len} bases "
+          f"({n_dev} device(s)) ...", flush=True)
     t0 = time.time()
     codes = random_dna(args.text_len, seed=args.seed)
-    store = build_tablet_store(codes, is_dna=True)
+    store = build_tablet_store(codes, is_dna=True, num_tablets=n_dev)
     jax.block_until_ready(store.sa)
     print(f"[build] done in {time.time() - t0:.1f}s "
           f"({args.text_len / max(time.time() - t0, 1e-9) / 1e6:.2f} Mbase/s)")
 
-    svc = HedgedScanService(store, replicas=args.replicas)
+    mesh = make_tablet_mesh(n_dev) if n_dev > 1 else None
+    planner = ScanPlanner(store, mesh=mesh,
+                          capacity_factor=args.capacity_factor)
+    svc = HedgedScanService(store, replicas=args.replicas, planner=planner)
     for hedged in (False, True):
         stats = svc.run_workload(args.queries, batch=args.batch,
                                  max_len=args.max_pattern, hedged=hedged,
@@ -50,6 +60,15 @@ def main(argv=None):
               f"hit={stats['hit_rate']:.3f} "
               f"corr(len,t)={stats['corr_len_time']:.3f} "
               f"corr(len,hit)={stats['corr_len_outcome']:.3f}")
+
+    # match enumeration: top-k occurrence positions for a few hot patterns
+    if args.top_k > 0:
+        hot = ["ACGT", "GATTACA", "TTTT"]
+        out = planner.scan(hot, top_k=args.top_k)
+        for p, c, row in zip(hot, out.count, out.positions):
+            shown = [int(x) for x in row if x >= 0]
+            print(f"[locate] {p!r}: count={int(c)} first_{args.top_k}={shown}")
+    print(f"[planner] {planner.stats.as_dict()}")
 
 
 if __name__ == "__main__":

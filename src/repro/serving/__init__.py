@@ -1,6 +1,7 @@
+from repro.core.planner import ScanPlanner
 from repro.serving.engine import (HedgedScanService, ServeConfig,
                                   greedy_generate, make_decode_fn,
                                   make_prefill_fn)
 
-__all__ = ["HedgedScanService", "ServeConfig", "greedy_generate",
-           "make_decode_fn", "make_prefill_fn"]
+__all__ = ["HedgedScanService", "ScanPlanner", "ServeConfig",
+           "greedy_generate", "make_decode_fn", "make_prefill_fn"]

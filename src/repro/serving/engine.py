@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import query as Q
+from repro.core.planner import ScanPlanner
 from repro.core.tablet import TabletStore
 from repro.models import decode_step, prefill
 from repro.models.config import ModelConfig
@@ -72,6 +73,14 @@ def greedy_generate(cfg: ModelConfig, params, batch, num_steps: int,
 # ---------------------------------------------------------------------------
 # TabletSA scan service with hedged reads (straggler mitigation)
 # ---------------------------------------------------------------------------
+def _safe_corr(a: np.ndarray, b: np.ndarray) -> float:
+    """Pearson correlation, defined as 0.0 when either column has zero
+    variance (hit rate exactly 0.0 or 1.0 made np.corrcoef emit NaN)."""
+    if len(a) < 2 or float(a.std()) == 0.0 or float(b.std()) == 0.0:
+        return 0.0
+    return float(np.corrcoef(a, b)[0, 1])
+
+
 @dataclasses.dataclass
 class HedgedScanService:
     """Simulates a replicated tablet-serving deployment.
@@ -91,6 +100,11 @@ class HedgedScanService:
     tail_scale_ms: float = 300.0
     hedge_deadline_ms: float = 15.0
     seed: int = 0
+    planner: Optional[ScanPlanner] = None
+
+    def __post_init__(self):
+        if self.planner is None:
+            self.planner = ScanPlanner(self.store)
 
     def _latency(self, rng, n) -> np.ndarray:
         lat = self.base_ms * rng.lognormal(0.0, self.sigma, size=n)
@@ -100,8 +114,9 @@ class HedgedScanService:
         return lat
 
     def scan(self, patterns_packed, plen, hedged: bool = True):
-        """Returns (MatchResult, latency_ms per query)."""
-        res = Q.query(self.store, patterns_packed, plen)
+        """Returns (MatchResult, latency_ms per query).  Scans go through
+        the planner: routed-path sentinels are retried to exact counts."""
+        res = self.planner.scan_encoded(patterns_packed, plen)
         rng = np.random.default_rng(self.seed)
         self.seed += 1
         n = int(plen.shape[0])
@@ -123,8 +138,10 @@ class HedgedScanService:
         b = 0
         while done < num_queries:
             take = min(batch, num_queries - done)
+            # random_patterns takes an int seed; derive a distinct stream
+            # per batch instead of passing an ad-hoc tuple
             pats = Q.random_patterns(take, min_len, max_len,
-                                     seed=(seed, b))
+                                     seed=seed * 100_003 + b)
             _, pp, pl = Q.encode_patterns(
                 pats, ((max_len + 15) // 16) * 16)
             res, lat = self.scan(pp, pl, hedged=hedged)
@@ -133,10 +150,14 @@ class HedgedScanService:
             len_all.append(np.asarray(pl))
             done += take
             b += 1
+        if not lat_all:            # num_queries == 0: well-defined zeros
+            z = 0.0
+            return {"n": 0, "mean_ms": z, "sd_ms": z, "min_ms": z,
+                    "max_ms": z, "p99_ms": z, "hit_rate": z, "mean_len": z,
+                    "corr_len_time": z, "corr_len_outcome": z}
         lat = np.concatenate(lat_all)
         out = np.concatenate(out_all)
         ln = np.concatenate(len_all)
-        corr = np.corrcoef(np.stack([lat, out.astype(float), ln]))
         return {
             "n": len(lat),
             "mean_ms": float(lat.mean()), "sd_ms": float(lat.std()),
@@ -144,6 +165,6 @@ class HedgedScanService:
             "p99_ms": float(np.percentile(lat, 99)),
             "hit_rate": float(out.mean()),
             "mean_len": float(ln.mean()),
-            "corr_len_time": float(corr[2, 0]),
-            "corr_len_outcome": float(corr[2, 1]),
+            "corr_len_time": _safe_corr(ln, lat),
+            "corr_len_outcome": _safe_corr(ln, out.astype(float)),
         }

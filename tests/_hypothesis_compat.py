@@ -1,0 +1,104 @@
+"""Seeded fallback for the tiny slice of the `hypothesis` API these tests
+use, so the suite collects and runs when hypothesis is not installed.
+
+Real hypothesis (shrinking, example database, coverage-guided generation)
+is strictly better — install it via requirements-dev.txt when possible.
+The fallback keeps the *property-test shape* of the suite: each `@given`
+test still runs `max_examples` randomized cases, drawn from a PRNG seeded
+by the test name so failures are reproducible run-to-run.
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import os
+import random
+import zlib
+
+# the fallback has no shrinking/coverage guidance, so very high example
+# counts buy little — cap them to keep tier-1 fast (override via env)
+_MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_FALLBACK_MAX_EXAMPLES", "15"))
+
+
+class _Strategy:
+    """A strategy is just a draw function over a ``random.Random``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def text(alphabet: str = "abcdefghij", min_size: int = 0,
+             max_size: int = 20) -> _Strategy:
+        alphabet = list(alphabet)
+
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return "".join(rng.choice(alphabet) for _ in range(n))
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+
+strategies = _Strategies()
+st = strategies
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    """Records max_examples on the test function; consumed by @given."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Runs the test ``max_examples`` times with freshly drawn arguments.
+    The PRNG seed derives from the test name, so runs are deterministic
+    and a falsifying draw reproduces on re-run."""
+
+    def deco(fn):
+        n_examples = min(getattr(fn, "_max_examples", 20), _MAX_EXAMPLES_CAP)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for i in range(n_examples):
+                drawn = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__name__}: "
+                        f"{drawn!r}") from e
+
+        # functools.wraps sets __wrapped__, which would make pytest see the
+        # original signature and demand fixtures for the drawn arguments
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -2,11 +2,14 @@
 benches must keep seeing 1 device, hence the isolation)."""
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 
 def test_distributed_sorts(multidevice):
     multidevice("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from functools import partial
 from repro.core.dsort import bitonic_sort_sharded, sort_sharded_auto
 
@@ -17,7 +20,7 @@ for m, rng_max in [(64, 20), (256, 10**6)]:   # tie-heavy and near-unique
     vals = np.arange(8*m, dtype=np.int32)
     for fn in (lambda o: bitonic_sort_sharded(o, num_keys=1, axis_name='t'),
                lambda o: sort_sharded_auto(o, num_keys=1, axis_name='t')):
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P('t'), P('t')),
+        @partial(shard_map, mesh=mesh, in_specs=(P('t'), P('t')),
                  out_specs=(P('t'), P('t')))
         def run(k, v):
             return fn((k, v))
@@ -51,6 +54,7 @@ def test_distributed_scan_matches_local(multidevice):
     multidevice("""
 import jax, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from functools import partial
 from repro.core.tablet import build_tablet_store
 from repro.core import query as Q
@@ -62,7 +66,7 @@ store = build_tablet_store(codes, num_tablets=8)
 pats = Q.random_patterns(64, 1, 10, seed=9)
 _, pp, pl = Q.encode_patterns(pats, 16)
 
-@partial(jax.shard_map, mesh=mesh, in_specs=(P('t'), None, P(), P()), out_specs=P())
+@partial(shard_map, mesh=mesh, in_specs=(P('t'), None, P(), P()), out_specs=P())
 def dscan(sa_local, meta, patt, plen):
     return Q.query_sharded(sa_local, meta, patt, plen, 't')
 
@@ -133,6 +137,7 @@ def test_pipeline_parallelism(multidevice):
     multidevice("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from functools import partial
 from repro.distributed.pipeline import pipeline_apply, stage_slice
 
@@ -146,7 +151,7 @@ def stage_fn(params, h):
     out, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), h, params)
     return out
 
-@partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()), out_specs=P())
+@partial(shard_map, mesh=mesh, in_specs=(P(), P()), out_specs=P())
 def run(Ws, xm):
     return pipeline_apply(stage_fn, stage_slice(Ws, 'pp', L), xm, 'pp')
 
@@ -172,6 +177,7 @@ def test_compressed_gradient_exchange(multidevice):
     multidevice("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from functools import partial
 from repro.distributed.compression import compressed_pmean
 
@@ -179,7 +185,7 @@ mesh = jax.make_mesh((8,), ('pod',))
 rng = np.random.default_rng(0)
 vals = np.asarray(rng.normal(size=(8, 4096)), np.float32)
 
-@partial(jax.shard_map, mesh=mesh, in_specs=(P('pod'), P('pod')),
+@partial(shard_map, mesh=mesh, in_specs=(P('pod'), P('pod')),
          out_specs=(P('pod'), P('pod')))
 def cm(v, e):
     m, ne = compressed_pmean(v[0], 'pod', e[0])
@@ -209,11 +215,12 @@ def test_int8_on_the_wire(multidevice):
     multidevice("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from functools import partial
 from repro.distributed.compression import compressed_pmean
 
 mesh = jax.make_mesh((8,), ('pod',))
-@partial(jax.shard_map, mesh=mesh, in_specs=(P('pod'), P('pod')),
+@partial(shard_map, mesh=mesh, in_specs=(P('pod'), P('pod')),
          out_specs=(P('pod'), P('pod')))
 def cm(v, e):
     m, ne = compressed_pmean(v[0], 'pod', e[0])
@@ -236,6 +243,7 @@ def test_routed_query_matches_broadcast(multidevice):
     multidevice("""
 import jax, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from functools import partial
 from repro.core.tablet import build_tablet_store
 from repro.core import query as Q
@@ -248,7 +256,7 @@ for seed in [5, 6, 9]:
     pats = Q.random_patterns(64, 1, 10, seed=seed + 100)
     _, pp, pl = Q.encode_patterns(pats, 16)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P('t'), None, P('t'), P('t')), out_specs=P('t'))
     def routed(sa_local, meta, patt, plen):
         return Q.query_routed(sa_local, meta, patt, plen, 't')
@@ -264,6 +272,69 @@ for seed in [5, 6, 9]:
     # saturated sentinel only for genuinely huge runs
     m = store.n_pad // 8
     assert (rc[cnt == -2] >= 1).all()
+print('OK')
+""")
+
+
+def test_planner_retry_restores_exact_counts(multidevice):
+    """Regression for the routed-path sentinels: a starved capacity factor
+    plus skewed/short patterns must produce both -1 (overflow) and -2
+    (saturated) counts, and the planner's broadcast retry must make every
+    count exact vs the brute-force oracle."""
+    multidevice("""
+import jax, numpy as np
+from repro.core.tablet import build_tablet_store
+from repro.core import query as Q
+from repro.core.codec import random_dna, encode_dna
+from repro.core.planner import ScanPlanner, MODE_ROUTED
+
+mesh = jax.make_mesh((8,), ('tablets',))
+codes = random_dna(4096, seed=5)
+store = build_tablet_store(codes, num_tablets=8)
+# 40 copies of 'A': every query owned by one tablet (forces -1 overflow)
+# and its match run spans >2 tablets (forces -2 saturation); plus patterns
+# prefixing each tablet's FIRST suffix (match run starts exactly at the
+# boundary: the owner's local run is empty and first_rank comes entirely
+# from the spill correction — regression for the frank=-1 bug)
+from repro.core.codec import decode_dna
+m = store.n_pad // 8
+sa_np = np.asarray(store.sa)
+boundary = [decode_dna(codes[int(sa_np[d*m]):int(sa_np[d*m])+6])
+            for d in range(1, 8) if int(sa_np[d*m]) <= 4096 - 8]
+pats = ['A'] * 40 + Q.random_patterns(24, 1, 10, seed=11) + boundary
+_, pp, pl = Q.encode_patterns(pats, 16)
+
+pln = ScanPlanner(store, mesh=mesh, capacity_factor=0.25, routed_min_batch=8)
+assert pln.plan(64).mode == MODE_ROUTED
+raw = pln.scan_encoded(pp, pl, mode=MODE_ROUTED, retry=False)
+rc = np.asarray(raw.count)
+assert (rc == -1).any(), 'expected dispatch-overflow sentinels'
+assert (rc == -2).any(), 'expected saturated-run sentinels'
+
+res = pln.scan_encoded(pp, pl)
+ref = Q.query(store, pp, pl)
+cc = codes.astype(np.int32)
+for i, p in enumerate(pats):
+    want, first = Q.brute_force_count(cc, encode_dna(p).astype(np.int32))
+    assert int(res.count[i]) == want, (p, int(res.count[i]), want)
+    assert bool(res.found[i]) == (want > 0)
+    assert int(res.first_rank[i]) == int(ref.first_rank[i]), p
+    assert int(res.first_pos[i]) == int(ref.first_pos[i]), p
+assert pln.stats.retried_overflow > 0 and pln.stats.retried_saturated > 0
+
+# locate positions round-trip through the text
+posn = pln.positions_from_result(res, top_k=5)
+for i, p in enumerate(pats):
+    for q in posn[i]:
+        if q >= 0:
+            assert (cc[q:q+len(p)] == encode_dna(p)).all()
+
+# small batches broadcast; counts equal the single-device oracle
+pln2 = ScanPlanner(store, mesh=mesh, routed_min_batch=1024)
+assert pln2.plan(64).mode == 'broadcast'
+res2 = pln2.scan_encoded(pp, pl)
+ref = Q.query(store, pp, pl)
+assert (np.asarray(res2.count) == np.asarray(ref.count)).all()
 print('OK')
 """)
 

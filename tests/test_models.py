@@ -11,6 +11,9 @@ from repro.configs import get_config, list_archs
 from repro.models import (decode_step, forward_train, init_params, prefill)
 from repro.models import transformer as T
 
+# whole-module: every case builds and runs a model — tier-1 excludes these
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs()
 
 

@@ -14,12 +14,18 @@ from repro.core.tablet import build_tablet_store
 from repro.serving import HedgedScanService
 
 
+# the service fixture builds a 200k-base SA and the workload tests push
+# tens of thousands of queries — slow-marked except the worked example
+slow_service = pytest.mark.slow
+
+
 @pytest.fixture(scope="module")
 def service():
     store = build_tablet_store(random_dna(200_000, seed=1), is_dna=True)
     return HedgedScanService(store)
 
 
+@slow_service
 def test_table3_hit_rate(service):
     """Paper Table III outcome mean 0.072 (250 Mbp chr1); our smaller text
     gives the same order: most random patterns >len 9-12 never match."""
@@ -27,6 +33,7 @@ def test_table3_hit_rate(service):
     assert 0.04 < stats["hit_rate"] < 0.14, stats["hit_rate"]
 
 
+@slow_service
 def test_table5_correlations(service):
     """corr(len, time) ~ 0; corr(len, outcome) strongly negative (-0.469)."""
     stats = service.run_workload(4000, batch=1000, hedged=False, seed=1)
@@ -34,6 +41,7 @@ def test_table5_correlations(service):
     assert stats["corr_len_outcome"] < -0.3
 
 
+@slow_service
 def test_table4_heavy_tail_and_hedging(service):
     """Paper Table IV: max 771ms vs mean 5.3ms under 50 threads.  The
     simulated replica latency reproduces the tail; hedged reads kill it."""
@@ -45,6 +53,7 @@ def test_table4_heavy_tail_and_hedging(service):
     assert hedged["mean_ms"] < single["mean_ms"] * 1.2
 
 
+@slow_service
 def test_exactness_vs_bruteforce_on_paper_workload(service):
     """The engine is exact, not approximate: spot-check outcomes against
     Algorithm 1 on a subsample."""

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the vendored seeded-random shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import codec, query as Q
 from repro.core.tablet import build_tablet_store
@@ -71,6 +74,38 @@ def test_first_pos_is_lexicographic_rank_order():
     assert int(res.first_pos[0]) == 8
     sa_real = np.asarray(store.sa)[store.pad_count:]
     assert sa_real[int(res.first_rank[0])] == 8
+
+
+def test_encode_patterns_empty_batch():
+    """Regression: np.stack([]) used to raise; retry passes with nothing
+    to retry produce empty batches naturally."""
+    pc, pp, pl = Q.encode_patterns([], 32)
+    assert pc.shape == (0, 32)
+    assert pp.shape == (0, codec.packed_length(32))
+    assert pl.shape == (0,)
+    store = _store("GATTACA")
+    res = Q.query(store, pp, pl)
+    assert np.asarray(res.count).shape == (0,)
+
+
+def test_pad_row_canonical_order():
+    """Pins build_tablet_store's pad-row layout: pad positions occupy the
+    first pad_count SA rows in descending position order (n_pad-1 .. n_real),
+    i.e. shortest pad run (lexicographically smallest suffix) first."""
+    codes = codec.encode_dna("ACGTACGTACG")        # n_real = 11
+    store = build_tablet_store(codes, is_dna=True, num_tablets=4)
+    assert store.n_pad == 12 and store.pad_count == 1
+    store = build_tablet_store(codes, is_dna=True, num_tablets=8)
+    assert store.n_pad == 16 and store.pad_count == 5
+    sa = np.asarray(store.sa)
+    want_pads = np.arange(store.n_pad - 1, store.n_real - 1, -1)
+    assert (sa[:store.pad_count] == want_pads).all()
+    # real rows are a permutation of 0..n_real-1 and suffix-sorted
+    real = sa[store.pad_count:]
+    assert sorted(real.tolist()) == list(range(store.n_real))
+    b = codes.tobytes()
+    for i in range(len(real) - 1):
+        assert b[real[i]:] < b[real[i + 1]:]
 
 
 def test_token_corpus_queries():

@@ -1,7 +1,10 @@
 """Suffix-array construction: JAX prefix doubling vs the naive oracle."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the vendored seeded-random shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import codec
 from repro.core.suffix_array import (adjacent_lcp, build_suffix_array,

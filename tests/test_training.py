@@ -12,6 +12,7 @@ from repro.training import OptConfig, make_train_step, train_state_init
 from repro.training import optimizer as opt
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     cfg = get_config("qwen3-0.6b").reduced()
     ocfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=30)
@@ -26,6 +27,7 @@ def test_loss_decreases():
     assert losses[-1] < losses[0] - 1.0, losses[:3] + losses[-3:]
 
 
+@pytest.mark.slow
 def test_microbatch_equals_full_batch_grads():
     """Accumulated grads over microbatches == single big batch (same data)."""
     cfg = get_config("qwen3-0.6b").reduced()
@@ -74,6 +76,7 @@ def test_adafactor_state_is_factored():
     assert st["b"]["v"].shape == (64,)
 
 
+@pytest.mark.slow
 def test_checkpoint_roundtrip_and_resume(tmp_path):
     from repro.checkpoint import CheckpointManager
     cfg = get_config("mamba2-780m").reduced()

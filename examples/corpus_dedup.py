@@ -1,13 +1,18 @@
 """LM-pipeline integration: suffix-array dedup + contamination search over
 a token corpus (DESIGN.md §3) — the paper's scan engine as training-data
-infrastructure.
+infrastructure, served from a named table in a ``repro.api.Catalog``
+(DNA and token corpora share one root, like Accumulo tables share one
+instance).  Contamination checks go through the table's merged read path,
+so tokens appended after the build are searched too.
 
     PYTHONPATH=src python examples/corpus_dedup.py
 """
+import tempfile
+
 import numpy as np
 
+from repro.api import Catalog
 from repro.core import dedup
-from repro.core.tablet import build_tablet_store
 
 rng = np.random.default_rng(0)
 
@@ -19,17 +24,27 @@ eval_window = docs[3][100:140].copy()        # eval n-gram leaked into train
 tokens = np.concatenate(docs)
 doc_ids = np.repeat(np.arange(len(docs)), 400)
 
-store = build_tablet_store(tokens, is_dna=False, max_query_len=64)
+catalog = Catalog(tempfile.mkdtemp(prefix="repro_tables_"))
+table = catalog.create_table("train_tokens", tokens, is_dna=False,
+                             max_query_len=64)
+print(f"catalog {catalog.root}: {catalog.list_tables()}")
 
-scores = dedup.doc_dup_scores(store, doc_ids, min_len=48)
-keep = dedup.filter_duplicate_docs(store, doc_ids, min_len=48)
+scores = dedup.doc_dup_scores(table, doc_ids, min_len=48)
+keep = dedup.filter_duplicate_docs(table, doc_ids, min_len=48)
 print("per-document duplicated fraction:")
 for i, (s, k) in enumerate(zip(scores, keep)):
     print(f"  doc {i}: dup={s:.2f} keep={bool(k)}")
 assert not (keep[1] and keep[5]), "one of the duplicate pair must drop"
 
-hits = dedup.contamination_check(store, eval_window[None, :])
+hits = dedup.contamination_check(table, eval_window[None, :])
 print(f"eval window contaminated: {bool(hits[0])} (expected True)")
 clean = dedup.contamination_check(
-    store, rng.integers(32000, 64000, 40).astype(np.int32)[None, :])
+    table, rng.integers(32000, 64000, 40).astype(np.int32)[None, :])
 print(f"random window contaminated: {bool(clean[0])} (expected False)")
+
+# a late-arriving training shard: append is searched without a rebuild
+late_window = rng.integers(0, 32000, 40).astype(np.int32)
+assert not dedup.contamination_check(table, late_window[None, :])[0]
+table.append(late_window)
+assert dedup.contamination_check(table, late_window[None, :])[0]
+print("appended shard visible to contamination search (merged read)")

@@ -1,16 +1,19 @@
-"""Quickstart: the paper's pipeline in 30 lines.
+"""Quickstart: the paper's pipeline in 30 lines, via the table API.
 
-Builds a suffix-array tablet store over a DNA string, runs pattern scans
-(paper §V), and shows the paper's own MISSISSIPPI worked example (§III).
+Builds a suffix-array table over a DNA string (``repro.api.SuffixTable``
+is the single public entry point — construction, scans, appends), runs
+pattern scans (paper §V), and shows the paper's own MISSISSIPPI worked
+example (§III) on the low-level store.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import codec, query as Q
+from repro.api import SuffixTable
+from repro.core import codec
 from repro.core.tablet import build_tablet_store
 
-# --- the paper's §III worked example ---------------------------------------
+# --- the paper's §III worked example (low-level store) ----------------------
 text = "MISSISSIPPI"
 codes = np.frombuffer(text.encode(), dtype=np.uint8).astype(np.int32)
 store = build_tablet_store(codes, is_dna=False)
@@ -19,14 +22,17 @@ print("ordered suffixes (paper §III):")
 for i in sa:
     print("  ", text[i:])
 
-# --- DNA scans (paper §IV-V) ------------------------------------------------
+# --- DNA scans (paper §IV-V) through the table facade -----------------------
 dna = codec.random_dna(100_000, seed=0)
-store = build_tablet_store(dna, is_dna=True)
+table = SuffixTable.from_codes(dna, is_dna=True)   # in-memory table
 
 patterns = ["ACGT", "TTTTTTTTTTTTTTTT", "GATTACA"]
-_, packed, lengths = Q.encode_patterns(patterns, 32)
-res = Q.query(store, packed, lengths)
-for p, found, count, pos in zip(patterns, res.found, res.count,
-                                res.first_pos):
+out = table.scan(patterns, top_k=3)
+for p, found, count, pos, row in zip(patterns, out.found, out.count,
+                                     out.first_pos, out.positions):
     print(f"pattern {p!r}: found={bool(found)} count={int(count)} "
-          f"first_pos={int(pos)}")
+          f"first_pos={int(pos)} top3={[int(x) for x in row if x >= 0]}")
+
+# --- the write path: append, merged exact read ------------------------------
+table.append("GATTACAGATTACA")
+print(f"after append: count('GATTACA') = {int(table.count(['GATTACA'])[0])}")

@@ -1,7 +1,9 @@
-"""Serving driver: batched scan requests against the tablet store — the
-paper's §V service shape, runnable end-to-end.  All scans go through the
-scan planner (repro.core.planner): broadcast/routed selection, sentinel
-retry, and top-k match enumeration.
+"""Serving driver: batched scan requests against a ``repro.api.SuffixTable``
+— the paper's §V service shape, runnable end-to-end.  All scans go through
+the table's merged read path on top of the scan planner (repro.core.planner):
+broadcast/routed selection, sentinel retry, memtable merge, and top-k match
+enumeration; the run ends with an append + compact (the write path).
+Pass ``--root DIR`` to persist and re-open the table across runs.
 
     PYTHONPATH=src python examples/serve_queries.py
 """

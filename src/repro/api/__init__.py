@@ -1,0 +1,13 @@
+"""repro.api — the table-level public API of the suffix-array store.
+
+``SuffixTable`` (create/open/scan/append/compact) is the single entry
+point for building, persisting, and querying suffix-array tables;
+``Catalog`` manages multiple named tables in one root directory.
+See docs/table_api.md.
+"""
+from repro.api.catalog import Catalog
+from repro.api.memtable import Memtable
+from repro.api.table import SuffixTable, default_root, open_table
+
+__all__ = ["Catalog", "Memtable", "SuffixTable", "default_root",
+           "open_table"]

@@ -1,0 +1,88 @@
+"""``Catalog`` — Accumulo's METADATA table, scaled down to one root dir.
+
+A catalog manages multiple named :class:`~repro.api.table.SuffixTable`\\ s
+(a DNA chromosome next to a token corpus) in a single root directory:
+
+    root/
+      catalog.json                 # {"tables": {name: {is_dna, ...}}}
+      <name>/                      # one dir per table (CheckpointManager)
+        step_0000000001/           #   atomic versioned snapshots
+          arrays.npz  meta.json    #   codes + sa_real + mem_codes
+        step_0000000002/ ...
+
+``catalog.json`` is rewritten atomically (tmp + ``os.replace``) so a
+preempted create/drop never corrupts the listing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Optional
+
+from repro.api.table import SuffixTable, default_root
+
+
+class Catalog:
+    """Named-table registry over one root directory."""
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = root or default_root()
+        os.makedirs(self.root, exist_ok=True)
+
+    # -- the metadata file ---------------------------------------------------
+    @property
+    def path(self) -> str:
+        return os.path.join(self.root, "catalog.json")
+
+    def load(self) -> dict:
+        if not os.path.exists(self.path):
+            return {"tables": {}}
+        with open(self.path) as f:
+            data = json.load(f)
+        data.setdefault("tables", {})
+        return data
+
+    def _write(self, data: dict) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".catalog.tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self.path)            # atomic publish
+
+    def register(self, name: str, meta: dict) -> None:
+        data = self.load()
+        data["tables"][name] = dict(meta)
+        self._write(data)
+
+    # -- queries -------------------------------------------------------------
+    def list_tables(self) -> list[str]:
+        return sorted(self.load()["tables"])
+
+    def table_meta(self, name: str) -> dict:
+        tables = self.load()["tables"]
+        if name not in tables:
+            raise KeyError(f"no table {name!r} in catalog {self.root!r}")
+        return tables[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.load()["tables"]
+
+    # -- table lifecycle -----------------------------------------------------
+    def create_table(self, name: str, codes, **kw) -> SuffixTable:
+        return SuffixTable.create(name, codes, root=self.root, **kw)
+
+    def open_table(self, name: str, **kw) -> SuffixTable:
+        return SuffixTable.open(name, root=self.root, **kw)
+
+    def drop_table(self, name: str, *, missing_ok: bool = False) -> None:
+        """Unregister ``name`` and delete its on-disk versions."""
+        data = self.load()
+        if name not in data["tables"]:
+            if missing_ok:
+                return
+            raise KeyError(f"no table {name!r} in catalog {self.root!r}")
+        del data["tables"][name]
+        self._write(data)
+        shutil.rmtree(os.path.join(self.root, name), ignore_errors=True)

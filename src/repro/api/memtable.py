@@ -1,0 +1,129 @@
+"""Single-device memtable suffix index — the write path of ``SuffixTable``.
+
+Bigtable/Accumulo serve reads from an immutable on-disk base plus an
+in-memory *memtable* of recent writes; a background compaction folds the
+memtable into the base.  ``Memtable`` is that analogue for a suffix-array
+table: appended codes are indexed in a small single-device ``TabletStore``
+built over ``tail + appended``, where ``tail`` is the last
+``max_query_len - 1`` symbols of the base text (the *overlap window*).
+
+The overlap window makes boundary-straddling occurrences — a match whose
+start lies in the base but whose end lies in the appended region — visible
+to the memtable, while every occurrence that lies entirely inside the base
+is left to the base index.  The merge rule is exact (docs/table_api.md):
+with ``g`` the global start position and ``n_base`` the base length, the
+memtable contributes exactly the occurrences with ``g + plen > n_base``;
+any occurrence it sees with ``g + plen <= n_base`` is already counted by
+the base scan, and no occurrence with ``g + plen > n_base`` can start
+before ``n_base - (max_query_len - 1)``, the left edge of the window.
+
+The memtable store is rebuilt lazily after each append, padded to
+power-of-two row buckets so the jitted query recompiles O(log appends)
+times rather than once per append.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.tablet import TabletStore, build_tablet_store
+
+
+def _bucket_rows(n: int) -> int:
+    """Next power of two >= n (floor 16) — the memtable's row padding."""
+    return 1 << max(4, (max(n, 1) - 1).bit_length())
+
+
+class Memtable:
+    """Recent appends to a :class:`~repro.api.SuffixTable`, queryable.
+
+    ``match_positions`` returns, per query, the **global** text positions
+    of exactly the occurrences the base index cannot see (straddling the
+    base/append boundary, or entirely inside appended text).
+    """
+
+    def __init__(self, base_codes: np.ndarray, *, is_dna: bool,
+                 max_query_len: int):
+        base_codes = np.asarray(base_codes)
+        self.n_base = int(base_codes.shape[0])
+        self.is_dna = bool(is_dna)
+        self.max_query_len = int(max_query_len)
+        self.overlap = int(min(max(self.max_query_len - 1, 0), self.n_base))
+        self._tail = np.ascontiguousarray(
+            base_codes[self.n_base - self.overlap:])
+        self._dtype = base_codes.dtype if base_codes.size else (
+            np.uint8 if is_dna else np.int32)
+        self._chunks: list[np.ndarray] = []
+        self.size = 0                       # appended symbols
+        self._store: Optional[TabletStore] = None
+        self._sa_host: Optional[np.ndarray] = None
+        self._query = jax.jit(Q.query)
+
+    # -- write --------------------------------------------------------------
+    def append(self, codes) -> int:
+        """Add codes to the memtable; returns the new memtable size."""
+        codes = np.asarray(codes)
+        if codes.ndim != 1:
+            raise ValueError(f"append expects a 1-D code array, "
+                             f"got shape {codes.shape}")
+        if codes.size == 0:
+            return self.size
+        if self.is_dna and int(codes.max()) > 3:
+            raise ValueError("DNA table: appended codes must be in {0..3} "
+                             "(use codec.encode_dna for strings)")
+        self._chunks.append(codes.astype(self._dtype))
+        self.size += int(codes.size)
+        self._store = None                  # rebuild lazily on next read
+        self._sa_host = None
+        return self.size
+
+    @property
+    def appended(self) -> np.ndarray:
+        """All appended codes, in order (empty array when size == 0)."""
+        if not self._chunks:
+            return np.zeros((0,), self._dtype)
+        if len(self._chunks) > 1:
+            self._chunks = [np.concatenate(self._chunks)]
+        return self._chunks[0]
+
+    # -- read ---------------------------------------------------------------
+    def _ensure_store(self) -> TabletStore:
+        if self._store is None:
+            text = np.concatenate([self._tail, self.appended])
+            self._store = build_tablet_store(
+                text, is_dna=self.is_dna, max_query_len=self.max_query_len,
+                min_rows=_bucket_rows(int(text.shape[0])))
+            self._sa_host = np.asarray(self._store.sa)
+        return self._store
+
+    def match_positions(self, patt, plen) -> list[np.ndarray]:
+        """Global start positions, ascending, of the occurrences only the
+        memtable can see; one exact int64 array per query (no top-k cap).
+        ``patt``/``plen`` use the same encoding as the base store."""
+        plen_np = np.asarray(plen)
+        B = int(plen_np.shape[0])
+        empty = np.zeros((0,), np.int64)
+        if self.size == 0 or B == 0:
+            return [empty] * B
+        store = self._ensure_store()
+        res = self._query(store, jnp.asarray(patt), jnp.asarray(plen))
+        count = np.asarray(res.count)
+        rank = np.asarray(res.first_rank)
+        sa, pad = self._sa_host, store.pad_count
+        offset = self.n_base - self.overlap     # local row -> global pos
+        out = []
+        for i in range(B):
+            c = int(count[i])
+            if c <= 0 or rank[i] < 0:
+                out.append(empty)
+                continue
+            lb = pad + int(rank[i])
+            g = sa[lb:lb + c].astype(np.int64) + offset
+            g = g[g + int(plen_np[i]) > self.n_base]
+            g.sort()
+            out.append(g)
+        return out

@@ -1,0 +1,439 @@
+"""``SuffixTable`` — the Bigtable-style table facade over the whole store.
+
+The paper's deliverable is not a function but a *table*: a durable, named
+suffix index you open, scan, and mutate (Accumulo gives Randazzo & Rombo
+and Wu et al. the same thing).  This module is that single public entry
+point; callers no longer hand-wire ``build_tablet_store`` + ``ScanPlanner``
++ mesh plumbing:
+
+* :meth:`SuffixTable.create` builds the suffix array (distributed over the
+  local mesh when more than one device is visible) and persists it through
+  ``CheckpointManager``-style atomic versioned files;
+* :meth:`SuffixTable.open` restores a table on **any** device count — the
+  persisted real-row suffix array is re-padded for the local tablet count
+  and the right mesh/planner are constructed internally;
+* reads (:meth:`count` / :meth:`contains` / :meth:`scan` / :meth:`locate`)
+  delegate to the :class:`~repro.core.planner.ScanPlanner` for the base
+  index and merge in the memtable (below);
+* the write path: :meth:`append` lands codes in a single-device
+  :class:`~repro.api.memtable.Memtable`; reads fan out to base + memtable
+  and merge exact counts and positions, including matches straddling the
+  base/append boundary (overlap window — see docs/table_api.md);
+  :meth:`compact` folds the memtable into the base SA and bumps the
+  persisted version; :meth:`flush` makes un-compacted appends durable.
+
+Multiple named tables live in one root directory under a
+:class:`~repro.api.catalog.Catalog` (Accumulo's METADATA analogue).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.memtable import Memtable
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import codec
+from repro.core.planner import ScanOutcome, ScanPlanner, TopKCache
+from repro.core.query import MatchResult
+from repro.core.suffix_array import build_suffix_array
+from repro.core.tablet import TabletStore, build_tablet_store, \
+    store_from_arrays
+from repro.launch.mesh import make_tablet_mesh
+
+# no leading dot: forbids '.', '..' (path traversal — drop_table rmtree's
+# the name under root) and hidden-file collisions; 'catalog.json' is the
+# catalog's own metadata file
+_NAME_RE = re.compile(r"(?!\.)[A-Za-z0-9._-]{1,128}")
+_RESERVED_NAMES = frozenset({"catalog.json"})
+
+
+def default_root() -> str:
+    """Root directory for persisted tables (``REPRO_TABLE_ROOT`` env var,
+    falling back to ``./repro_tables``)."""
+    return os.environ.get("REPRO_TABLE_ROOT", "repro_tables")
+
+
+def _check_name(name: str) -> str:
+    if not _NAME_RE.fullmatch(name or "") or name in _RESERVED_NAMES:
+        raise ValueError(f"table name {name!r} must match "
+                         f"{_NAME_RE.pattern} and not be reserved "
+                         f"(it becomes a directory under the root)")
+    return name
+
+
+def _as_codes(codes, is_dna: Optional[bool]):
+    """Normalize input text: DNA strings/bytes become uint8 codes."""
+    if isinstance(codes, (str, bytes, bytearray)):
+        return codec.encode_dna(codes), True
+    codes = np.asarray(codes)
+    if is_dna is None:
+        is_dna = bool(codes.size > 0 and codes.max() < 4)
+    return codes, bool(is_dna)
+
+
+def _named_arrays(arrays: dict) -> dict:
+    """Strip ``_flatten`` path decoration: ``"['codes']"`` -> ``"codes"``."""
+    return {re.sub(r"[^0-9A-Za-z_]", "", k): v for k, v in arrays.items()}
+
+
+class SuffixTable:
+    """A named, versioned, mutable suffix-array table.
+
+    Construct through :meth:`create` / :meth:`open` (persistent) or
+    :meth:`from_codes` / :meth:`from_store` (in-memory); the constructor
+    itself wires the runtime (store + mesh + planner) for the *current*
+    device count from host arrays.
+    """
+
+    def __init__(self, codes: np.ndarray, sa_real: np.ndarray, *,
+                 is_dna: bool, max_query_len: int = 128,
+                 name: Optional[str] = None, root: Optional[str] = None,
+                 version: int = 0, cache_size: int = 4096, keep_n: int = 3,
+                 capacity_factor: float = 2.0, routed_min_batch: int = 64,
+                 memtable_limit: Optional[int] = None,
+                 distributed_build: Optional[bool] = None,
+                 _store: Optional[TabletStore] = None,
+                 _planner: Optional[ScanPlanner] = None):
+        self.name = name
+        self.root = root
+        self.version = int(version)
+        self.is_dna = bool(is_dna)
+        self.max_query_len = int(max_query_len)
+        self.keep_n = int(keep_n)
+        self.capacity_factor = float(capacity_factor)
+        self.routed_min_batch = int(routed_min_batch)
+        self.cache_size = int(cache_size)
+        self.memtable_limit = memtable_limit
+        self._codes = np.asarray(codes)
+
+        if _store is not None:                       # from_store: adopt as-is
+            self.mesh = _planner.mesh if _planner is not None else None
+            self.store = _store
+            self.planner = _planner or ScanPlanner(
+                _store, cache_size=cache_size,
+                capacity_factor=capacity_factor,
+                routed_min_batch=routed_min_batch)
+        else:
+            n_dev = len(jax.devices())
+            self.mesh = make_tablet_mesh(n_dev) if n_dev > 1 else None
+            self._attach(self._codes, np.asarray(sa_real, np.int32))
+        self._distributed_build = (self.mesh is not None
+                                   if distributed_build is None
+                                   else bool(distributed_build))
+        self.memtable = Memtable(self._codes, is_dna=self.is_dna,
+                                 max_query_len=self.max_query_len)
+        self._cache = TopKCache(cache_size)
+        self._manager: Optional[CheckpointManager] = None
+        if self.root is not None and self.name is not None:
+            self._manager = CheckpointManager(
+                os.path.join(self.root, self.name), keep_n=self.keep_n)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_codes(cls, codes, *, is_dna: Optional[bool] = None,
+                   max_query_len: int = 128, **kw) -> "SuffixTable":
+        """In-memory table (no persistence): build over ``codes`` now,
+        distributed over the local mesh when >1 device is visible."""
+        codes, is_dna = _as_codes(codes, is_dna)
+        table = cls(codes, cls._build_sa_for(codes, max_query_len, is_dna),
+                    is_dna=is_dna, max_query_len=max_query_len, **kw)
+        return table
+
+    @classmethod
+    def from_store(cls, store: TabletStore, *,
+                   planner: Optional[ScanPlanner] = None,
+                   **kw) -> "SuffixTable":
+        """Wrap an existing :class:`TabletStore` (deprecation shim for
+        pre-table callers).  The store and optional planner are adopted
+        unchanged; appends and merged reads work, persistence needs
+        :meth:`create`."""
+        codes = np.asarray(store.text_codes[:store.n_real])
+        if store.is_dna:
+            codes = codes.astype(np.uint8)
+        return cls(codes, None, is_dna=store.is_dna,
+                   max_query_len=store.max_query_len,
+                   _store=store, _planner=planner, **kw)
+
+    @classmethod
+    def create(cls, name: str, codes, *, root: Optional[str] = None,
+               is_dna: Optional[bool] = None, max_query_len: int = 128,
+               overwrite: bool = False, **kw) -> "SuffixTable":
+        """Build AND persist version 1 of a named table under ``root``,
+        registering it in the root's :class:`Catalog`."""
+        import shutil
+        from repro.api.catalog import Catalog
+        _check_name(name)
+        root = root or default_root()
+        catalog = Catalog(root)
+        table_dir = os.path.join(root, name)
+        if name in catalog or os.path.isdir(table_dir):
+            if not overwrite:
+                raise FileExistsError(
+                    f"table {name!r} already exists in {root!r} — "
+                    f"SuffixTable.open() it, or pass overwrite=True")
+            # drop stale snapshots: a survivor with a higher step would
+            # shadow (or GC) the fresh version-1 save below
+            shutil.rmtree(table_dir, ignore_errors=True)
+        codes, is_dna = _as_codes(codes, is_dna)
+        table = cls(codes, cls._build_sa_for(codes, max_query_len, is_dna),
+                    is_dna=is_dna, max_query_len=max_query_len,
+                    name=name, root=root, version=1, **kw)
+        table._persist()
+        catalog.register(name, {"is_dna": table.is_dna,
+                                "max_query_len": table.max_query_len})
+        return table
+
+    @classmethod
+    def open(cls, name: str, *, root: Optional[str] = None,
+             **kw) -> "SuffixTable":
+        """Restore the latest persisted version of ``name`` on the current
+        device count (the saved SA is re-padded; no rebuild).  Un-compacted
+        appends saved by :meth:`flush` are restored into the memtable."""
+        _check_name(name)
+        root = root or default_root()
+        table_dir = os.path.join(root, name)
+        if not os.path.isdir(table_dir):        # before CheckpointManager:
+            raise FileNotFoundError(            # its ctor mkdirs the path
+                f"no table {name!r} under {root!r}")
+        mgr = CheckpointManager(table_dir)
+        step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"no persisted version of table {name!r} under {root!r}")
+        arrays, extra = mgr.restore_arrays(step)
+        arrays = _named_arrays(arrays)
+        table = cls(arrays["codes"], arrays["sa_real"],
+                    is_dna=bool(extra["is_dna"]),
+                    max_query_len=int(extra["max_query_len"]),
+                    name=name, root=root, version=int(extra["version"]),
+                    **kw)
+        mem = arrays.get("mem_codes")
+        if mem is not None and mem.size:
+            table.memtable.append(mem)
+        return table
+
+    @staticmethod
+    def _build_sa_for(codes: np.ndarray, max_query_len: int,
+                      is_dna: bool) -> np.ndarray:
+        """Real-row SA over ``codes`` — distributed over the local mesh
+        when >1 device is visible, single-device otherwise."""
+        n_dev = len(jax.devices())
+        if n_dev > 1:
+            mesh = make_tablet_mesh(n_dev)
+            store = build_tablet_store(codes, is_dna=is_dna,
+                                       max_query_len=max_query_len,
+                                       mesh=mesh, axis_name="tablets")
+            return np.asarray(store.sa)[store.pad_count:]
+        return np.asarray(build_suffix_array(codes.astype(np.int32)))
+
+    def _attach(self, codes: np.ndarray, sa_real: np.ndarray) -> None:
+        """(Re)build the runtime store + planner for the current mesh."""
+        p = 1 if self.mesh is None else int(
+            np.prod([self.mesh.shape[a] for a in self.mesh.axis_names]))
+        self.store = store_from_arrays(
+            codes, sa_real, is_dna=self.is_dna,
+            max_query_len=self.max_query_len, num_tablets=p)
+        self.planner = ScanPlanner(
+            self.store, mesh=self.mesh, cache_size=self.cache_size,
+            capacity_factor=self.capacity_factor,
+            routed_min_batch=self.routed_min_batch)
+
+    # -- introspection -------------------------------------------------------
+    def __len__(self) -> int:
+        """Total indexed symbols: base + un-compacted appends."""
+        return int(self._codes.shape[0]) + self.memtable.size
+
+    @property
+    def n_base(self) -> int:
+        return int(self._codes.shape[0])
+
+    @property
+    def is_persistent(self) -> bool:
+        return self._manager is not None
+
+    def stats(self) -> dict:
+        return {"name": self.name, "version": self.version,
+                "n_base": self.n_base, "memtable_rows": self.memtable.size,
+                "is_dna": self.is_dna, "planner": self.planner.stats.as_dict()}
+
+    def _sa(self) -> np.ndarray:
+        # the planner already caches a host copy of the same store.sa —
+        # don't materialize a second one per table
+        return self.planner._sa()
+
+    # -- read path -----------------------------------------------------------
+    def scan_encoded(self, patt, plen, *, mode: Optional[str] = None
+                     ) -> MatchResult:
+        """Exact merged scan of an encoded batch (see ``ScanPlanner.
+        scan_encoded`` for encodings).  With an empty memtable this is a
+        pure delegation; otherwise ``count`` adds the memtable-only
+        occurrences, and ``first_pos`` of a base miss becomes the smallest
+        straddle/append position.  ``first_rank`` always refers to the
+        BASE suffix array (−1 when the only matches are in the memtable)
+        — do not feed a merged result to ``planner.positions_from_result``,
+        use :meth:`scan`/:meth:`locate` for merged enumeration."""
+        base = self.planner.scan_encoded(patt, plen, mode=mode)
+        if self.memtable.size == 0:
+            return base
+        extra = self.memtable.match_positions(patt, plen)
+        count = np.asarray(base.count).astype(np.int64)
+        first_pos = np.asarray(base.first_pos).astype(np.int64)
+        for i, g in enumerate(extra):
+            if g.size:
+                count[i] += g.size
+                if first_pos[i] < 0:
+                    first_pos[i] = int(g[0])
+        found = count > 0
+        return MatchResult(found=jnp.asarray(found),
+                           count=jnp.asarray(count),
+                           first_rank=base.first_rank,
+                           first_pos=jnp.asarray(first_pos))
+
+    def scan(self, patterns: list[str], top_k: int = 0) -> ScanOutcome:
+        """String-level merged scan with **text-order** semantics: exact
+        ``count``; ``first_pos`` is the smallest occurrence position;
+        ``positions`` (when ``top_k > 0``) are the ``top_k`` smallest
+        occurrence start positions, ascending, −1-padded — the complete
+        set whenever ``count <= top_k``.  (The planner's own string API
+        instead reports suffix-rank order over the base only.)  Results
+        are LRU-cached; the cache is dropped on :meth:`append` /
+        :meth:`compact`."""
+        B = len(patterns)
+        count = np.zeros(B, np.int64)
+        first_pos = np.full(B, -1, np.int64)
+        positions = (np.full((B, top_k), -1, np.int64) if top_k else None)
+        miss_idx: list[int] = []
+        for i, pat in enumerate(patterns):
+            hit = self._cache.get(pat, top_k)
+            if hit is not None:
+                count[i], first_pos[i] = hit[0], hit[1]
+                if top_k:
+                    positions[i] = hit[2]
+            else:
+                miss_idx.append(i)
+        if miss_idx:
+            patt, plen = self.planner.encode([patterns[i] for i in miss_idx])
+            base = self.planner.scan_encoded(patt, plen)
+            extra = self.memtable.match_positions(patt, plen)
+            base_count = np.asarray(base.count).astype(np.int64)
+            base_rank = np.asarray(base.first_rank)
+            sa, pad = self._sa(), self.store.pad_count
+            for j, i in enumerate(miss_idx):
+                run = np.zeros((0,), np.int64)
+                cb = int(base_count[j])
+                if cb > 0 and base_rank[j] >= 0:
+                    lb = pad + int(base_rank[j])
+                    run = sa[lb:lb + cb].astype(np.int64)
+                g = extra[j]
+                count[i] = cb + g.size
+                firsts = ([int(run.min())] if run.size else []) + \
+                    ([int(g[0])] if g.size else [])
+                if firsts:
+                    first_pos[i] = min(firsts)
+                row = None
+                if top_k:
+                    cand = np.concatenate([run, g])
+                    if cand.size > top_k:
+                        cand = np.partition(cand, top_k - 1)[:top_k]
+                    cand.sort()
+                    row = np.full(top_k, -1, np.int64)
+                    row[:cand.size] = cand
+                    positions[i] = row
+                self._cache.put(patterns[i], int(count[i]),
+                                int(first_pos[i]), top_k, row)
+        return ScanOutcome(found=count > 0, count=count,
+                           first_pos=first_pos, positions=positions)
+
+    def count(self, patterns: list[str]) -> np.ndarray:
+        """Exact occurrence counts, (B,) int64."""
+        return self.scan(patterns).count
+
+    def contains(self, patterns: list[str]) -> np.ndarray:
+        """Per-pattern membership, (B,) bool."""
+        return self.scan(patterns).found
+
+    def locate(self, patterns: list[str], top_k: int = 8) -> np.ndarray:
+        """Up to ``top_k`` smallest occurrence positions per pattern,
+        ascending, (B, top_k) int64, −1-padded."""
+        return self.scan(patterns, top_k=top_k).positions
+
+    # -- write path ----------------------------------------------------------
+    def append(self, codes) -> int:
+        """Append text to the table (memtable write path); visible to all
+        subsequent reads with exact merged counts.  Returns the memtable
+        size; triggers :meth:`compact` at ``memtable_limit``."""
+        if isinstance(codes, (str, bytes, bytearray)):
+            if not self.is_dna:
+                raise TypeError("string appends are DNA-only; pass a code "
+                                "array for token tables")
+            codes = codec.encode_dna(codes)
+        self.memtable.append(codes)
+        self._cache.clear()
+        if (self.memtable_limit is not None
+                and self.memtable.size >= self.memtable_limit):
+            self.compact()
+        return self.memtable.size
+
+    def compact(self) -> int:
+        """Fold the memtable into the base suffix array (full rebuild over
+        the concatenated text — distributed when the table has a mesh),
+        clear the memtable, bump and persist the version.  No-op on an
+        empty memtable.  Returns the current version."""
+        if self.memtable.size == 0:
+            return self.version
+        combined = np.concatenate(
+            [self._codes, self.memtable.appended.astype(self._codes.dtype,
+                                                        copy=False)])
+        if self.mesh is not None and self._distributed_build:
+            sa_real = self.__class__._build_sa_for(
+                combined, self.max_query_len, self.is_dna)
+        else:
+            sa_real = np.asarray(
+                build_suffix_array(combined.astype(np.int32)))
+        self._codes = combined
+        self._attach(combined, sa_real)
+        self.memtable = Memtable(combined, is_dna=self.is_dna,
+                                 max_query_len=self.max_query_len)
+        self._cache.clear()
+        self.version += 1
+        self._persist()
+        return self.version
+
+    def flush(self) -> None:
+        """Persist the current state — base arrays AND un-compacted
+        memtable codes — without compacting (same version, re-published
+        atomically).  :meth:`open` restores the memtable.  Raises on an
+        in-memory table: durability is this method's entire contract."""
+        if self._manager is None:
+            raise RuntimeError(
+                "flush() on a non-persistent table — build it with "
+                "SuffixTable.create(...) to get durable storage")
+        self._persist()
+
+    def _persist(self) -> None:
+        if self._manager is None:
+            return
+        pad = self.store.pad_count
+        sa_real = np.asarray(self.store.sa)[pad:]
+        state = {"codes": self._codes,
+                 "sa_real": sa_real,
+                 "mem_codes": self.memtable.appended}
+        extra = {"kind": "suffix_table", "name": self.name,
+                 "version": self.version, "is_dna": self.is_dna,
+                 "max_query_len": self.max_query_len,
+                 "n_base": self.n_base, "mem_len": self.memtable.size}
+        self._manager.save(self.version, state, extra=extra)
+
+
+# Back-compat: the pre-table spelling, one call deep.
+def open_table(name: str, *, root: Optional[str] = None,
+               **kw) -> SuffixTable:
+    return SuffixTable.open(name, root=root, **kw)
+
+
+TableLike = Union[SuffixTable, TabletStore]

@@ -76,6 +76,17 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def restore_arrays(self, step: int):
+        """Raw restore: ``({path: np.ndarray}, extra)`` with no ``like``
+        tree — for callers (``repro.api.SuffixTable``) whose array shapes
+        are only known from the checkpoint itself."""
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        arrays = {p: data[f"a{i}"] for i, p in enumerate(meta["paths"])}
+        return arrays, meta["extra"]
+
     def restore(self, step: int, like: Any, shardings: Any = None):
         """Restore into the structure of ``like``; optionally device_put
         with ``shardings`` (tree of NamedSharding) — this is the elastic

@@ -2,16 +2,17 @@
 engine (construction, storage, scan) in JAX.  See DESIGN.md."""
 from repro.core import codec, dedup, dsa, dsort, planner, query, \
     suffix_array, tablet
-from repro.core.planner import ScanOutcome, ScanPlan, ScanPlanner
+from repro.core.planner import ScanOutcome, ScanPlan, ScanPlanner, TopKCache
 from repro.core.query import MatchResult, encode_patterns, query as scan, \
     query_sharded as scan_sharded, random_patterns
 from repro.core.suffix_array import build_suffix_array, suffix_array_naive
-from repro.core.tablet import TabletStore, build_tablet_store
+from repro.core.tablet import (TabletStore, build_tablet_store,
+                               store_from_arrays)
 
 __all__ = [
     "MatchResult", "ScanOutcome", "ScanPlan", "ScanPlanner", "TabletStore",
-    "build_suffix_array", "build_tablet_store", "codec", "dedup", "dsa",
-    "dsort", "encode_patterns", "planner", "query",
-    "random_patterns", "scan", "scan_sharded", "suffix_array",
-    "suffix_array_naive", "tablet",
+    "TopKCache", "build_suffix_array", "build_tablet_store", "codec",
+    "dedup", "dsa", "dsort", "encode_patterns", "planner", "query",
+    "random_patterns", "scan", "scan_sharded", "store_from_arrays",
+    "suffix_array", "suffix_array_naive", "tablet",
 ]

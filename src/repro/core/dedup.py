@@ -5,6 +5,12 @@ sorted suffix store) is exactly what LM data pipelines need for
 (a) exact-duplicate span detection (suffix-array dedup a la Lee et al.),
 (b) eval-set contamination queries, and (c) exact-match retrieval.
 This module wires the core engine into ``repro.data`` (DESIGN.md §3).
+
+Every function accepts either a bare :class:`TabletStore` (pre-table
+shim) or a :class:`repro.api.SuffixTable`.  LCP-based span detection runs
+over the table's BASE index (``compact()`` first to cover appends);
+``contamination_check`` on a table goes through the merged read path, so
+appended-but-uncompacted training text is already searched.
 """
 from __future__ import annotations
 
@@ -16,12 +22,20 @@ from repro.core.suffix_array import adjacent_lcp
 from repro.core.tablet import TabletStore
 
 
-def duplicate_span_mask(store: TabletStore, min_len: int) -> jnp.ndarray:
+def _base_store(store) -> TabletStore:
+    """Unwrap a SuffixTable to its base TabletStore; pass stores through."""
+    if isinstance(store, TabletStore):
+        return store
+    return store.store
+
+
+def duplicate_span_mask(store, min_len: int) -> jnp.ndarray:
     """Boolean mask over text positions: True where a substring of length
     >= min_len starting there occurs at least twice in the corpus.
 
     Adjacent rows of the suffix array with LCP >= min_len are exactly the
     pairs of duplicated spans; both members get marked."""
+    store = _base_store(store)
     text = store.text_codes
     sa = store.sa
     lcp = adjacent_lcp(text, sa, min_len)           # (n_pad-1,)
@@ -35,13 +49,13 @@ def duplicate_span_mask(store: TabletStore, min_len: int) -> jnp.ndarray:
     return mask_text[: store.n_real]
 
 
-def duplicate_fraction(store: TabletStore, min_len: int) -> jnp.ndarray:
+def duplicate_fraction(store, min_len: int) -> jnp.ndarray:
     """Fraction of corpus positions inside >=min_len duplicated spans."""
     m = duplicate_span_mask(store, min_len)
     return jnp.mean(m.astype(jnp.float32))
 
 
-def doc_dup_scores(store: TabletStore, doc_ids: np.ndarray,
+def doc_dup_scores(store, doc_ids: np.ndarray,
                    min_len: int) -> np.ndarray:
     """Per-document duplicated-position fraction.  ``doc_ids`` maps each
     text position to its document (int, length n_real)."""
@@ -54,17 +68,21 @@ def doc_dup_scores(store: TabletStore, doc_ids: np.ndarray,
     return dup / np.maximum(tot, 1)
 
 
-def filter_duplicate_docs(store: TabletStore, doc_ids: np.ndarray,
+def filter_duplicate_docs(store, doc_ids: np.ndarray,
                           min_len: int, threshold: float = 0.5) -> np.ndarray:
     """Returns the boolean keep-mask over documents (True = keep)."""
     return doc_dup_scores(store, doc_ids, min_len) < threshold
 
 
-def contamination_check(store: TabletStore, eval_token_windows: np.ndarray
+def contamination_check(store, eval_token_windows: np.ndarray
                         ) -> np.ndarray:
     """True per eval window if it appears verbatim in the training corpus.
-    ``eval_token_windows``: (B, L) int32 token n-grams."""
+    ``eval_token_windows``: (B, L) int32 token n-grams.  Given a
+    SuffixTable, the merged read path also searches un-compacted appends."""
     w = jnp.asarray(eval_token_windows, jnp.int32)
     plen = jnp.full((w.shape[0],), w.shape[1], jnp.int32)
-    res = Q.query(store, w, plen)
+    if isinstance(store, TabletStore):
+        res = Q.query(store, w, plen)
+    else:
+        res = store.scan_encoded(w, plen)
     return np.asarray(res.found)

@@ -91,6 +91,63 @@ class PlannerStats:
         return d
 
 
+class TopKCache:
+    """LRU over pattern strings, top_k-aware.
+
+    One entry per pattern holds ``(count, first_pos, k_stored, row)``.
+    An entry cached with ``k_stored`` positions serves ANY request with
+    ``top_k <= k_stored`` by slicing, and any ``top_k`` at all when the
+    cached position set is complete (``count <= k_stored``) — instead of
+    storing duplicate entries per ``(pattern, top_k)`` key.  A request
+    needing more positions than stored is a miss and its result
+    overwrites the entry (never with fewer positions than it had).
+    Shared by :class:`ScanPlanner` and ``repro.api.SuffixTable``.
+    """
+
+    def __init__(self, size: int):
+        self.size = int(size)
+        self._d: OrderedDict[str, tuple] = OrderedDict()
+
+    def get(self, pattern: str, top_k: int):
+        """(count, first_pos, positions (top_k,) | None) or None on miss."""
+        if self.size <= 0:
+            return None
+        ent = self._d.get(pattern)
+        if ent is None:
+            return None
+        count, first_pos, k_stored, row = ent
+        if top_k > 0 and k_stored < top_k and count > k_stored:
+            return None            # not enough positions cached
+        self._d.move_to_end(pattern)
+        if top_k <= 0:
+            return count, first_pos, None
+        out = np.full(top_k, -1, np.int64)
+        if row is not None:
+            take = np.asarray(row)[:top_k]
+            out[:take.shape[0]] = take
+        return count, first_pos, out
+
+    def put(self, pattern: str, count: int, first_pos: int,
+            k_stored: int, row) -> None:
+        if self.size <= 0:
+            return
+        old = self._d.get(pattern)
+        if old is not None and old[2] > k_stored:
+            self._d.move_to_end(pattern)     # keep the richer entry
+            return
+        self._d[pattern] = (int(count), int(first_pos), int(k_stored),
+                            None if row is None else np.asarray(row))
+        self._d.move_to_end(pattern)
+        while len(self._d) > self.size:
+            self._d.popitem(last=False)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
 @dataclasses.dataclass(frozen=True)
 class ScanOutcome:
     """Host-side result of a string-level scan: exact counts always.
@@ -148,7 +205,7 @@ class ScanPlanner:
         self.cache_size = int(cache_size)
         self.max_pattern_len = int(max_pattern_len or store.max_query_len)
         self.stats = PlannerStats()
-        self._cache: OrderedDict[tuple, tuple] = OrderedDict()
+        self._cache = TopKCache(self.cache_size)
         self._sa_host: Optional[np.ndarray] = None
         # executors are built lazily and injectable for tests: each maps
         # (patt, plen) -> MatchResult
@@ -246,6 +303,14 @@ class ScanPlanner:
         ``retry=False`` the raw sentinels are returned (benchmarks only).
         """
         B = int(patt.shape[0])
+        if B:
+            max_plen = int(np.max(np.asarray(plen)))
+            if max_plen > self.max_pattern_len:
+                raise ValueError(
+                    f"pattern length {max_plen} exceeds max_pattern_len="
+                    f"{self.max_pattern_len}; compares are depth-capped, so "
+                    f"longer patterns would be silently truncated — rebuild "
+                    f"the store with a larger max_query_len")
         chosen = mode or self.plan(B).mode
         if chosen not in (MODE_SINGLE, MODE_BROADCAST, MODE_ROUTED):
             raise ValueError(f"unknown scan mode {chosen!r}")
@@ -335,23 +400,44 @@ class ScanPlanner:
         return np.where(valid, sa[idx], -1)[:, :top_k].astype(np.int64)
 
     # -- string-level API with LRU cache ------------------------------------
-    def _encode(self, patterns: list[str]):
-        max_len = codec.packed_length(self.max_pattern_len) * codec.BASES_PER_WORD
-        codes, packed, lengths = Q.encode_patterns(patterns, max_len)
+    def encode(self, patterns: list[str]):
+        """Encode pattern strings for :meth:`scan_encoded`: (patt, plen).
+
+        Packed uint32 words for DNA stores (word-packing rounds the width
+        up to a 16-base multiple), exact-width int32 codes otherwise.
+        Raises on any pattern longer than ``max_pattern_len`` — compares
+        are depth-capped, so a longer pattern would silently match on its
+        truncated prefix.
+        """
+        for p in patterns:
+            if len(p) > self.max_pattern_len:
+                raise ValueError(
+                    f"pattern of length {len(p)} exceeds max_pattern_len="
+                    f"{self.max_pattern_len} ({p[:32]!r}...); compares are "
+                    f"depth-capped, so it would be silently truncated")
         if self.store.is_dna:
+            width = (codec.packed_length(self.max_pattern_len)
+                     * codec.BASES_PER_WORD)
+            _codes, packed, lengths = Q.encode_patterns(patterns, width)
             return packed, lengths
+        codes, _packed, lengths = Q.encode_patterns(patterns,
+                                                    self.max_pattern_len)
         return codes, lengths
+
+    # back-compat alias (pre-api_redesign name)
+    _encode = encode
 
     def scan(self, patterns: list[str], top_k: int = 0) -> ScanOutcome:
         """Scan a batch of pattern strings; exact counts, optional
-        enumeration, LRU-cached per (pattern, top_k)."""
+        enumeration, LRU-cached per pattern (top_k-aware: see
+        :class:`TopKCache`)."""
         B = len(patterns)
         count = np.full(B, -1, np.int64)
         first_pos = np.full(B, -1, np.int64)
         positions = (np.full((B, top_k), -1, np.int64) if top_k else None)
         miss_idx: list[int] = []
         for i, pat in enumerate(patterns):
-            hit = self._cache_get((pat, top_k))
+            hit = self._cache.get(pat, top_k)
             if hit is not None:
                 count[i], first_pos[i] = hit[0], hit[1]
                 if top_k:
@@ -362,7 +448,7 @@ class ScanPlanner:
         self.stats.cache_misses += len(miss_idx)
 
         if miss_idx:
-            patt, plen = self._encode([patterns[i] for i in miss_idx])
+            patt, plen = self.encode([patterns[i] for i in miss_idx])
             res = self.scan_encoded(patt, plen)
             sub_count = np.asarray(res.count)
             sub_first = np.asarray(res.first_pos)
@@ -374,31 +460,14 @@ class ScanPlanner:
                 row = sub_pos[j] if top_k else None
                 if top_k:
                     positions[i] = row
-                self._cache_put((patterns[i], top_k),
-                                (int(sub_count[j]), int(sub_first[j]), row))
+                self._cache.put(patterns[i], int(sub_count[j]),
+                                int(sub_first[j]), top_k, row)
         return ScanOutcome(found=count > 0, count=count,
                            first_pos=first_pos, positions=positions)
 
     def locate(self, patterns: list[str], top_k: int = 8) -> np.ndarray:
         """String-level enumeration: (B, top_k) positions, -1 padded."""
         return self.scan(patterns, top_k=top_k).positions
-
-    # -- cache plumbing ------------------------------------------------------
-    def _cache_get(self, key):
-        if self.cache_size <= 0:
-            return None
-        hit = self._cache.get(key)
-        if hit is not None:
-            self._cache.move_to_end(key)
-        return hit
-
-    def _cache_put(self, key, value):
-        if self.cache_size <= 0:
-            return
-        self._cache[key] = value
-        self._cache.move_to_end(key)
-        while len(self._cache) > self.cache_size:
-            self._cache.popitem(last=False)
 
     def clear_cache(self) -> None:
         self._cache.clear()

@@ -51,38 +51,9 @@ class TabletStore:
         return self.n_pad // num_tablets
 
 
-def build_tablet_store(codes, *, is_dna: bool | None = None,
-                       max_query_len: int = 128,
-                       num_tablets: int = 1,
-                       mesh=None, axis_name: str | None = None,
-                       method: str = "bitonic") -> TabletStore:
-    """Build the store.  Single-device when mesh is None, otherwise the
-    distributed builder (paper's pre-processing phase on the cluster)."""
-    codes = np.asarray(codes)
+def _finalize_store(codes: np.ndarray, sa, n_pad: int, *, is_dna: bool,
+                    max_query_len: int) -> TabletStore:
     n_real = int(codes.shape[0])
-    if is_dna is None:
-        is_dna = codes.size > 0 and codes.max() < 4
-
-    if mesh is None:
-        p = num_tablets
-        m = int(np.ceil(max(n_real, 1) / p))
-        n_pad = m * p
-        sa_real = build_suffix_array(codes.astype(np.int32))
-        # pad rows (positions n_real..n_pad-1) sort before all real rows,
-        # longest-run-of-pads first => ascending position order n_real..n_pad-1
-        # is exactly DEscending pad-run length; order among pads never affects
-        # queries, but keep the canonical order the distributed builder makes:
-        # pad suffix at position q is a run of (n_pad - q) minimal symbols and
-        # shorter runs are prefixes => sort ascending by run length, i.e.
-        # positions n_pad-1, n_pad-2, ..., n_real.
-        pads = np.arange(n_pad - 1, n_real - 1, -1, dtype=np.int32)
-        sa = jnp.asarray(np.concatenate([pads, np.asarray(sa_real)]))
-    else:
-        assert axis_name is not None
-        sa, _pad = build_suffix_array_distributed(codes, mesh, axis_name,
-                                                  method=method)
-        n_pad = int(sa.shape[0])
-
     text_packed = codec.pack_2bit(codes) if is_dna else None
     # generic code array padded with -1 so out-of-range gathers sort low
     text_codes = jnp.asarray(
@@ -92,3 +63,61 @@ def build_tablet_store(codes, *, is_dna: bool | None = None,
                        sa=jnp.asarray(sa, jnp.int32), n_real=n_real,
                        n_pad=n_pad, is_dna=bool(is_dna),
                        max_query_len=max_query_len)
+
+
+def store_from_arrays(codes, sa_real, *, is_dna: bool,
+                      max_query_len: int = 128, num_tablets: int = 1,
+                      min_rows: int = 0) -> TabletStore:
+    """Assemble a store from the text and its (already built) real-row
+    suffix array — the restore path of ``repro.api.SuffixTable``: a table
+    persisted on one device count is re-padded here for any other.
+
+    Pad rows (positions n_real..n_pad-1) sort before all real rows and
+    are inert for queries; their canonical order matches the distributed
+    builder's: the pad suffix at position q is a run of (n_pad - q)
+    minimal symbols and shorter runs are prefixes, so they sort ascending
+    by run length, i.e. positions n_pad-1, n_pad-2, ..., n_real.
+
+    ``min_rows`` raises n_pad beyond the num_tablets multiple (the
+    memtable uses power-of-two buckets so jitted queries recompile
+    O(log appends) times, not once per append).
+    """
+    codes = np.asarray(codes)
+    sa_real = np.asarray(sa_real, np.int32)
+    n_real = int(codes.shape[0])
+    if sa_real.shape[0] != n_real:
+        raise ValueError(f"sa_real has {sa_real.shape[0]} rows for "
+                         f"{n_real} text symbols")
+    p = num_tablets
+    m = int(np.ceil(max(n_real, min_rows, 1) / p))
+    n_pad = m * p
+    pads = np.arange(n_pad - 1, n_real - 1, -1, dtype=np.int32)
+    sa = jnp.asarray(np.concatenate([pads, sa_real]))
+    return _finalize_store(codes, sa, n_pad, is_dna=bool(is_dna),
+                           max_query_len=max_query_len)
+
+
+def build_tablet_store(codes, *, is_dna: bool | None = None,
+                       max_query_len: int = 128,
+                       num_tablets: int = 1,
+                       min_rows: int = 0,
+                       mesh=None, axis_name: str | None = None,
+                       method: str = "bitonic") -> TabletStore:
+    """Build the store.  Single-device when mesh is None, otherwise the
+    distributed builder (paper's pre-processing phase on the cluster)."""
+    codes = np.asarray(codes)
+    if is_dna is None:
+        is_dna = codes.size > 0 and codes.max() < 4
+
+    if mesh is None:
+        sa_real = build_suffix_array(codes.astype(np.int32))
+        return store_from_arrays(codes, np.asarray(sa_real),
+                                 is_dna=bool(is_dna),
+                                 max_query_len=max_query_len,
+                                 num_tablets=num_tablets,
+                                 min_rows=min_rows)
+    assert axis_name is not None
+    sa, _pad = build_suffix_array_distributed(codes, mesh, axis_name,
+                                              method=method)
+    return _finalize_store(codes, sa, int(sa.shape[0]),
+                           is_dna=bool(is_dna), max_query_len=max_query_len)

@@ -1,12 +1,18 @@
-"""Serving launcher — the paper's workload end-to-end.
+"""Serving launcher — the paper's workload end-to-end, through the table API.
 
-Builds a tablet store over a synthetic DNA corpus (distributed construction
-when >1 device), then serves batched random-pattern scans through the scan
-planner (single / broadcast / routed+retry selection) and prints the
-paper's Table III/IV statistics, with and without hedged reads.
+Creates (or re-opens) a named ``repro.api.SuffixTable`` over a synthetic
+DNA corpus — distributed construction when >1 device — then serves batched
+random-pattern scans through ``HedgedScanService`` (scan-planner execution
+with sentinel retry, plus the table's merged base+memtable reads) and
+prints the paper's Table III/IV statistics, with and without hedged reads.
+Finishes with the write path: append a planted segment, show the exact
+merged count, compact, and report the bumped version.
 
     PYTHONPATH=src python -m repro.launch.serve --text-len 200000 \
         --queries 10000 --batch 512
+
+Pass ``--root DIR`` to persist: the first run creates ``--table`` under
+DIR, later runs ``SuffixTable.open`` it (no rebuild) on any device count.
 """
 from __future__ import annotations
 
@@ -15,10 +21,8 @@ import time
 
 import jax
 
-from repro.core.codec import random_dna
-from repro.core.planner import ScanPlanner
-from repro.core.tablet import build_tablet_store
-from repro.launch.mesh import make_tablet_mesh
+from repro.api import Catalog, SuffixTable
+from repro.core.codec import decode_dna, random_dna
 from repro.serving import HedgedScanService
 
 
@@ -32,23 +36,38 @@ def main(argv=None):
     ap.add_argument("--capacity-factor", type=float, default=2.0)
     ap.add_argument("--top-k", type=int, default=5,
                     help="positions per query in the locate demo")
+    ap.add_argument("--root", default=None,
+                    help="catalog root dir; omit for an in-memory table")
+    ap.add_argument("--table", default="dna_serve",
+                    help="table name under --root")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     n_dev = len(jax.devices())
-    print(f"[build] suffix array over {args.text_len} bases "
-          f"({n_dev} device(s)) ...", flush=True)
     t0 = time.time()
-    codes = random_dna(args.text_len, seed=args.seed)
-    store = build_tablet_store(codes, is_dna=True, num_tablets=n_dev)
-    jax.block_until_ready(store.sa)
-    print(f"[build] done in {time.time() - t0:.1f}s "
-          f"({args.text_len / max(time.time() - t0, 1e-9) / 1e6:.2f} Mbase/s)")
+    if args.root is not None and args.table in Catalog(args.root):
+        print(f"[open ] table {args.table!r} from {args.root} "
+              f"({n_dev} device(s)) ...", flush=True)
+        table = SuffixTable.open(args.table, root=args.root,
+                                 capacity_factor=args.capacity_factor)
+        print(f"[open ] v{table.version}, {len(table)} bases "
+              f"in {time.time() - t0:.1f}s (no rebuild)")
+    else:
+        print(f"[build] suffix array over {args.text_len} bases "
+              f"({n_dev} device(s)) ...", flush=True)
+        codes = random_dna(args.text_len, seed=args.seed)
+        if args.root is None:
+            table = SuffixTable.from_codes(
+                codes, is_dna=True, capacity_factor=args.capacity_factor)
+        else:
+            table = SuffixTable.create(
+                args.table, codes, root=args.root, is_dna=True,
+                capacity_factor=args.capacity_factor)
+        dt = time.time() - t0
+        print(f"[build] done in {dt:.1f}s "
+              f"({args.text_len / max(dt, 1e-9) / 1e6:.2f} Mbase/s)")
 
-    mesh = make_tablet_mesh(n_dev) if n_dev > 1 else None
-    planner = ScanPlanner(store, mesh=mesh,
-                          capacity_factor=args.capacity_factor)
-    svc = HedgedScanService(store, replicas=args.replicas, planner=planner)
+    svc = HedgedScanService(table, replicas=args.replicas)
     for hedged in (False, True):
         stats = svc.run_workload(args.queries, batch=args.batch,
                                  max_len=args.max_pattern, hedged=hedged,
@@ -64,11 +83,22 @@ def main(argv=None):
     # match enumeration: top-k occurrence positions for a few hot patterns
     if args.top_k > 0:
         hot = ["ACGT", "GATTACA", "TTTT"]
-        out = planner.scan(hot, top_k=args.top_k)
+        out = table.scan(hot, top_k=args.top_k)
         for p, c, row in zip(hot, out.count, out.positions):
             shown = [int(x) for x in row if x >= 0]
             print(f"[locate] {p!r}: count={int(c)} first_{args.top_k}={shown}")
-    print(f"[planner] {planner.stats.as_dict()}")
+
+    print(f"[table ] {table.stats()}")
+
+    # the write path: append, merged read, compact (compaction rebuilds
+    # the planner, so the workload stats above are printed first)
+    planted = "GATTACA" * 3
+    before = int(table.count([planted])[0])
+    table.append(planted + decode_dna(random_dna(993, seed=args.seed + 1)))
+    after = int(table.count([planted])[0])
+    v = table.compact()
+    print(f"[write ] append 1000 bases: count({planted[:10]}...) "
+          f"{before} -> {after} (merged read); compacted to v{v}")
 
 
 if __name__ == "__main__":

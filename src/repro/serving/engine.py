@@ -12,8 +12,7 @@ time and reports the same statistics as Tables III/IV.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +84,11 @@ def _safe_corr(a: np.ndarray, b: np.ndarray) -> float:
 class HedgedScanService:
     """Simulates a replicated tablet-serving deployment.
 
+    ``table`` is the :class:`repro.api.SuffixTable` being served; scans go
+    through its merged read path, so appended-but-uncompacted data is
+    visible with exact counts.  A bare :class:`TabletStore` is still
+    accepted (deprecation shim) and wrapped in an in-memory table.
+
     ``replicas`` tablet-store replicas serve every scan batch; per-request
     replica latency = base_ms * lognormal(sigma) with a pareto tail of
     probability tail_p and scale tail_scale (the paper's 771 ms events).
@@ -92,7 +96,7 @@ class HedgedScanService:
     min(primary, deadline + backup).  Scan RESULTS come from the real
     engine; only latency is simulated (no real multi-machine here).
     """
-    store: TabletStore
+    table: "object"                  # SuffixTable | TabletStore (shim)
     replicas: int = 2
     base_ms: float = 5.0
     sigma: float = 0.35
@@ -103,8 +107,21 @@ class HedgedScanService:
     planner: Optional[ScanPlanner] = None
 
     def __post_init__(self):
+        from repro.api.table import SuffixTable
+        if isinstance(self.table, TabletStore):
+            self.table = SuffixTable.from_store(self.table,
+                                                planner=self.planner)
         if self.planner is None:
-            self.planner = ScanPlanner(self.store)
+            self.planner = self.table.planner
+        # private generator (not a dataclass field): repeated workloads are
+        # reproducible per service instance, and scan() no longer mutates
+        # the dataclass's compare-by-value state (the old `self.seed += 1`)
+        self._rng = np.random.default_rng(self.seed)
+
+    @property
+    def store(self) -> TabletStore:
+        """The served table's base store (back-compat accessor)."""
+        return self.table.store
 
     def _latency(self, rng, n) -> np.ndarray:
         lat = self.base_ms * rng.lognormal(0.0, self.sigma, size=n)
@@ -115,10 +132,10 @@ class HedgedScanService:
 
     def scan(self, patterns_packed, plen, hedged: bool = True):
         """Returns (MatchResult, latency_ms per query).  Scans go through
-        the planner: routed-path sentinels are retried to exact counts."""
-        res = self.planner.scan_encoded(patterns_packed, plen)
-        rng = np.random.default_rng(self.seed)
-        self.seed += 1
+        the table's merged read path (base via the planner — routed-path
+        sentinels retried to exact counts — plus the memtable)."""
+        res = self.table.scan_encoded(patterns_packed, plen)
+        rng = self._rng
         n = int(plen.shape[0])
         primary = self._latency(rng, n)
         if not hedged or self.replicas < 2:

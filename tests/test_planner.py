@@ -120,6 +120,42 @@ def test_lru_cache_hits_and_eviction(store):
     assert int(again.count[0]) == int(fresh.count[0])
 
 
+def test_cache_is_topk_aware(store, text_codes):
+    """One cache entry per pattern: a (pattern, top_k=8) entry serves any
+    request with top_k <= 8 by slicing, and any top_k at all once the
+    position set is complete (count <= k_stored) — no duplicate entries
+    per (pattern, top_k) key."""
+    planner = ScanPlanner(store)
+    # a pattern with a healthy occurrence count
+    p = "".join("ACGT"[c] for c in text_codes[100:103])
+    full = planner.scan([p], top_k=8)
+    n = int(full.count[0])
+    assert n > 8, "fixture text too small for this test"
+    assert planner.stats.cache_misses == 1
+    # smaller top_k: served by slicing the k=8 entry
+    out4 = planner.scan([p], top_k=4)
+    assert planner.stats.cache_hits == 1
+    assert (out4.positions[0] == full.positions[0][:4]).all()
+    # count-only: also a hit
+    out0 = planner.scan([p])
+    assert planner.stats.cache_hits == 2
+    assert int(out0.count[0]) == n
+    # larger top_k than stored (and count > stored): honest miss,
+    # entry upgraded in place
+    out16 = planner.scan([p], top_k=16)
+    assert planner.stats.cache_misses == 2
+    assert (out16.positions[0][:8] == full.positions[0]).all()
+    assert len(planner._cache) == 1
+    # re-request smaller k after the upgrade: still a hit
+    planner.scan([p], top_k=8)
+    assert planner.stats.cache_hits == 3
+    # a zero-count pattern is complete at any k: top_k request hits
+    miss_pat = "ACGT" * 8                     # long pattern, almost surely 0
+    if int(planner.scan([miss_pat]).count[0]) == 0:
+        planner.scan([miss_pat], top_k=8)
+        assert planner.stats.cache_hits == 4
+
+
 def test_cached_batch_and_empty_batch(store):
     """A fully cache-served batch triggers the empty-encode path."""
     planner = ScanPlanner(store)

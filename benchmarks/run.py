@@ -10,7 +10,8 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, paper_tables, roofline, table_bench
+    from benchmarks import compaction_bench, kernel_bench, paper_tables, \
+        roofline, table_bench
 
     benches = [
         ("table1_preprocess_build", paper_tables.bench_build_table1),
@@ -23,6 +24,7 @@ def main() -> None:
         ("planner_scan_1M_rows", kernel_bench.bench_planner_scan),
         ("kernel_pack_2bit", kernel_bench.bench_pack_throughput),
         ("table_merged_scan", table_bench.bench_table_ops),
+        ("lsm_compaction", compaction_bench.bench_compaction),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

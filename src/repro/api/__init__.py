@@ -7,7 +7,8 @@ See docs/table_api.md.
 """
 from repro.api.catalog import Catalog
 from repro.api.memtable import Memtable
+from repro.api.runs import Run
 from repro.api.table import SuffixTable, default_root, open_table
 
-__all__ = ["Catalog", "Memtable", "SuffixTable", "default_root",
+__all__ = ["Catalog", "Memtable", "Run", "SuffixTable", "default_root",
            "open_table"]

@@ -1,67 +1,75 @@
 """Single-device memtable suffix index — the write path of ``SuffixTable``.
 
 Bigtable/Accumulo serve reads from an immutable on-disk base plus an
-in-memory *memtable* of recent writes; a background compaction folds the
-memtable into the base.  ``Memtable`` is that analogue for a suffix-array
-table: appended codes are indexed in a small single-device ``TabletStore``
-built over ``tail + appended``, where ``tail`` is the last
-``max_query_len - 1`` symbols of the base text (the *overlap window*).
+in-memory *memtable* of recent writes; minor compaction seals the memtable
+into an immutable run (``repro.api.runs``) and major compaction folds the
+runs into the base.  ``Memtable`` is the mutable head of that LSM stack:
+appended codes are indexed in a small single-device ``TabletStore`` built
+over ``tail + appended``, where ``tail`` is the last ``max_query_len - 1``
+symbols of the logical text before this memtable (the *overlap window* —
+base text for a fresh table, base + sealed runs otherwise).
 
 The overlap window makes boundary-straddling occurrences — a match whose
-start lies in the base but whose end lies in the appended region — visible
-to the memtable, while every occurrence that lies entirely inside the base
-is left to the base index.  The merge rule is exact (docs/table_api.md):
-with ``g`` the global start position and ``n_base`` the base length, the
-memtable contributes exactly the occurrences with ``g + plen > n_base``;
-any occurrence it sees with ``g + plen <= n_base`` is already counted by
-the base scan, and no occurrence with ``g + plen > n_base`` can start
-before ``n_base - (max_query_len - 1)``, the left edge of the window.
+start lies before the memtable's region but whose end lies inside it —
+visible to the memtable, while every occurrence ending earlier is left to
+the base/run tier that owns it.  The merge rule is exact
+(docs/table_api.md): with ``g`` the global start position and ``n_base``
+the logical text length when this memtable started, the memtable
+contributes exactly the occurrences with ``n_base < g + plen <=
+n_base + size``; nothing ending at or before ``n_base`` is its to report,
+and no occurrence ending past ``n_base`` can start before
+``n_base - (max_query_len - 1)``, the left edge of the window.
 
-The memtable store is rebuilt lazily after each append, padded to
-power-of-two row buckets so the jitted query recompiles O(log appends)
-times rather than once per append.
+The memtable store is rebuilt lazily after each append over text padded
+to a power-of-two length (symbol 0) — ``n_real`` is a *static* field of
+the jitted query, so padding the text itself (rather than only the SA
+rows) is what actually bounds recompilation to O(log appends); the
+two-sided position filter makes the pad symbols inert.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import query as Q
-from repro.core.tablet import TabletStore, build_tablet_store
-
-
-def _bucket_rows(n: int) -> int:
-    """Next power of two >= n (floor 16) — the memtable's row padding."""
-    return 1 << max(4, (max(n, 1) - 1).bit_length())
+from repro.api.runs import padded_segment_store, positions_in_bounds
+from repro.core.tablet import TabletStore
 
 
 class Memtable:
     """Recent appends to a :class:`~repro.api.SuffixTable`, queryable.
 
     ``match_positions`` returns, per query, the **global** text positions
-    of exactly the occurrences the base index cannot see (straddling the
-    base/append boundary, or entirely inside appended text).
+    of exactly the occurrences this memtable owns (ending inside its
+    appended region: straddling the boundary, or entirely inside).
     """
 
     def __init__(self, base_codes: np.ndarray, *, is_dna: bool,
-                 max_query_len: int):
+                 max_query_len: int, n_base: Optional[int] = None):
+        """``base_codes`` is the logical text preceding this memtable —
+        or, when ``n_base`` is given, just its tail (at least the overlap
+        window) with ``n_base`` the true logical length (the post-seal
+        constructor: the full base + runs text is never materialized)."""
         base_codes = np.asarray(base_codes)
-        self.n_base = int(base_codes.shape[0])
+        self.n_base = (int(base_codes.shape[0]) if n_base is None
+                       else int(n_base))
+        if base_codes.shape[0] > self.n_base:
+            raise ValueError(f"tail of {base_codes.shape[0]} symbols for a "
+                             f"logical prefix of only {self.n_base}")
         self.is_dna = bool(is_dna)
         self.max_query_len = int(max_query_len)
         self.overlap = int(min(max(self.max_query_len - 1, 0), self.n_base))
+        if base_codes.shape[0] < self.overlap:
+            raise ValueError(f"need the last {self.overlap} symbols of the "
+                             f"logical prefix, got {base_codes.shape[0]}")
         self._tail = np.ascontiguousarray(
-            base_codes[self.n_base - self.overlap:])
+            base_codes[base_codes.shape[0] - self.overlap:])
         self._dtype = base_codes.dtype if base_codes.size else (
             np.uint8 if is_dna else np.int32)
         self._chunks: list[np.ndarray] = []
         self.size = 0                       # appended symbols
         self._store: Optional[TabletStore] = None
         self._sa_host: Optional[np.ndarray] = None
-        self._query = jax.jit(Q.query)
 
     # -- write --------------------------------------------------------------
     def append(self, codes) -> int:
@@ -72,6 +80,11 @@ class Memtable:
                              f"got shape {codes.shape}")
         if codes.size == 0:
             return self.size
+        if int(codes.min()) < 0:
+            # a negative code would wrap on the uint8 DNA cast (corrupting
+            # the index) and aliases the generic store's -1 padding
+            raise ValueError("appended codes must be non-negative "
+                             f"(got min {int(codes.min())})")
         if self.is_dna and int(codes.max()) > 3:
             raise ValueError("DNA table: appended codes must be in {0..3} "
                              "(use codec.encode_dna for strings)")
@@ -94,36 +107,19 @@ class Memtable:
     def _ensure_store(self) -> TabletStore:
         if self._store is None:
             text = np.concatenate([self._tail, self.appended])
-            self._store = build_tablet_store(
-                text, is_dna=self.is_dna, max_query_len=self.max_query_len,
-                min_rows=_bucket_rows(int(text.shape[0])))
+            self._store = padded_segment_store(
+                text, is_dna=self.is_dna, max_query_len=self.max_query_len)
             self._sa_host = np.asarray(self._store.sa)
         return self._store
 
     def match_positions(self, patt, plen) -> list[np.ndarray]:
         """Global start positions, ascending, of the occurrences only the
-        memtable can see; one exact int64 array per query (no top-k cap).
+        memtable owns; one exact int64 array per query (no top-k cap).
         ``patt``/``plen`` use the same encoding as the base store."""
-        plen_np = np.asarray(plen)
-        B = int(plen_np.shape[0])
-        empty = np.zeros((0,), np.int64)
+        B = int(np.asarray(plen).shape[0])
         if self.size == 0 or B == 0:
-            return [empty] * B
+            return [np.zeros((0,), np.int64)] * B
         store = self._ensure_store()
-        res = self._query(store, jnp.asarray(patt), jnp.asarray(plen))
-        count = np.asarray(res.count)
-        rank = np.asarray(res.first_rank)
-        sa, pad = self._sa_host, store.pad_count
-        offset = self.n_base - self.overlap     # local row -> global pos
-        out = []
-        for i in range(B):
-            c = int(count[i])
-            if c <= 0 or rank[i] < 0:
-                out.append(empty)
-                continue
-            lb = pad + int(rank[i])
-            g = sa[lb:lb + c].astype(np.int64) + offset
-            g = g[g + int(plen_np[i]) > self.n_base]
-            g.sort()
-            out.append(g)
-        return out
+        return positions_in_bounds(store, self._sa_host, patt, plen,
+                                   offset=self.n_base - self.overlap,
+                                   lo=self.n_base, hi=self.n_base + self.size)

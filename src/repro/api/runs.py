@@ -1,0 +1,203 @@
+"""Immutable LSM runs — the middle tier of the ``SuffixTable`` write path.
+
+Bigtable/Accumulo never let the memtable grow unboundedly: a *minor
+compaction* seals it into an immutable on-disk run, and reads fan out over
+base + runs + memtable until a *major compaction* folds the runs back into
+the base.  :class:`Run` is that sealed memtable for a suffix-array table:
+the frozen suffix index a :class:`~repro.api.memtable.Memtable` had built
+over ``tail + appended`` (the overlap window plus this run's codes), now
+immutable, queryable, and persisted alongside the base snapshot.
+
+Tier layout, with ``start_i`` the logical text length when run *i* was
+sealed (``end_i = start_i + len(codes_i)``)::
+
+    base [0, n_base) | run 0 [start_0, end_0) | run 1 ... | memtable
+
+Every occurrence of a pattern ends in exactly one tier, which gives the
+exact merge rule (the per-run generalization of the memtable's
+``g + plen > n_base`` straddle rule, docs/table_api.md):
+
+* the base reports occurrences with ``g + plen <= n_base``;
+* run *i* reports occurrences with ``start_i < g + plen <= end_i`` —
+  straddling into, or entirely inside, this run's appended codes;
+* the memtable reports occurrences ending past the last run.
+
+No occurrence ending inside run *i* can start before ``start_i -
+(max_query_len - 1)``, the left edge of its overlap window, so each run's
+small index sees everything it must report.
+
+Run stores share the memtable's *bucket-padded* text layout: the text is
+padded to a power-of-two length with symbol 0, so the jitted query
+specializes on O(log) distinct shapes instead of one per run, and the
+two-sided position filter above makes the padding inert (any match using
+pad symbols ends past ``end_i``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.tablet import TabletStore, build_tablet_store
+
+# One jitted query shared by every run and memtable generation: jax.jit
+# caches per (store shape/meta, batch shape), so equally-sized runs and
+# successive memtables reuse compilations instead of re-jitting per object.
+_shared_query = jax.jit(Q.query)
+
+
+def bucket_rows(n: int) -> int:
+    """Next power of two >= n (floor 16) — text padding for run/memtable
+    stores, bounding jit specializations to O(log appends)."""
+    return 1 << max(4, (max(n, 1) - 1).bit_length())
+
+
+def padded_segment_store(text: np.ndarray, *, is_dna: bool,
+                         max_query_len: int) -> TabletStore:
+    """Single-device store over ``text`` padded to a power-of-two length
+    with symbol 0.  The pad symbols are REAL to the store (they keep
+    ``n_real`` — a static jit field — stable across appends); callers must
+    filter out any occurrence that overlaps them, which the two-sided
+    ``lo < g + plen <= hi`` rule does for free."""
+    n = int(text.shape[0])
+    padded = np.pad(text, (0, bucket_rows(n) - n))
+    return build_tablet_store(padded, is_dna=is_dna,
+                              max_query_len=max_query_len)
+
+
+def positions_in_bounds(store: TabletStore, sa_host: np.ndarray,
+                        patt, plen, *, offset: int, lo: int, hi: int
+                        ) -> list[np.ndarray]:
+    """Query ``store`` and return, per query, the ascending GLOBAL start
+    positions of occurrences with ``lo < g + plen <= hi`` (the tier's
+    exact contribution).  ``offset`` maps local store rows to global text
+    positions."""
+    plen_np = np.asarray(plen)
+    B = int(plen_np.shape[0])
+    empty = np.zeros((0,), np.int64)
+    if B == 0:
+        return []
+    res = _shared_query(store, jnp.asarray(patt), jnp.asarray(plen))
+    count = np.asarray(res.count)
+    rank = np.asarray(res.first_rank)
+    pad = store.pad_count
+    out = []
+    for i in range(B):
+        c = int(count[i])
+        if c <= 0 or rank[i] < 0:
+            out.append(empty)
+            continue
+        lb = pad + int(rank[i])
+        g = sa_host[lb:lb + c].astype(np.int64) + offset
+        e = g + int(plen_np[i])
+        g = g[(e > lo) & (e <= hi)]
+        g.sort()
+        out.append(g)
+    return out
+
+
+def logical_tail(segments: list[np.ndarray], k: int) -> np.ndarray:
+    """Last ``k`` symbols of ``concatenate(segments)`` without
+    materializing the concatenation (the overlap window of the next
+    memtable after a seal)."""
+    if k <= 0:
+        return np.zeros((0,), segments[0].dtype if segments else np.uint8)
+    parts: list[np.ndarray] = []
+    need = k
+    for seg in reversed(segments):
+        if need <= 0:
+            break
+        seg = np.asarray(seg)
+        take = seg[max(0, seg.shape[0] - need):]
+        if take.size:
+            parts.append(take)
+            need -= int(take.shape[0])
+    parts.reverse()
+    if not parts:
+        return np.zeros((0,), segments[0].dtype if segments else np.uint8)
+    return np.ascontiguousarray(np.concatenate(parts))
+
+
+class Run:
+    """One immutable, persisted LSM run: a sealed memtable.
+
+    ``tail`` is the overlap window (the last ``max_query_len - 1`` symbols
+    of the logical text before ``start``), ``codes`` this run's appended
+    symbols.  The suffix index over ``tail + codes`` is taken frozen from
+    the sealing memtable when available, rebuilt lazily otherwise (the
+    restore path persists it, so ``open`` never rebuilds).
+    """
+
+    def __init__(self, tail: np.ndarray, codes: np.ndarray, *, start: int,
+                 is_dna: bool, max_query_len: int,
+                 store: Optional[TabletStore] = None,
+                 sa_host: Optional[np.ndarray] = None):
+        self.tail = np.ascontiguousarray(tail)
+        self.codes = np.ascontiguousarray(codes)
+        self.start = int(start)
+        self.length = int(self.codes.shape[0])
+        self.is_dna = bool(is_dna)
+        self.max_query_len = int(max_query_len)
+        self.overlap = int(self.tail.shape[0])
+        self._store = store
+        self._sa_host = (np.asarray(sa_host) if sa_host is not None
+                         else None)
+
+    @property
+    def end(self) -> int:
+        return self.start + self.length
+
+    @classmethod
+    def from_memtable(cls, mem) -> "Run":
+        """Seal a memtable: freeze its codes, window, and (if already
+        built) its store — minor compaction's only real work."""
+        mem._ensure_store()                   # seal an index, not raw codes
+        return cls(mem._tail, mem.appended.copy(), start=mem.n_base,
+                   is_dna=mem.is_dna, max_query_len=mem.max_query_len,
+                   store=mem._store, sa_host=mem._sa_host)
+
+    def _ensure_store(self) -> TabletStore:
+        if self._store is None:
+            text = np.concatenate([self.tail, self.codes])
+            self._store = padded_segment_store(
+                text, is_dna=self.is_dna, max_query_len=self.max_query_len)
+            self._sa_host = np.asarray(self._store.sa)
+        return self._store
+
+    @property
+    def sa_padded(self) -> np.ndarray:
+        """The run's full suffix array over its padded text (persisted so
+        ``open`` restores the index instead of rebuilding it)."""
+        self._ensure_store()
+        return self._sa_host
+
+    @classmethod
+    def restore(cls, tail: np.ndarray, codes: np.ndarray, sa_padded, *,
+                start: int, is_dna: bool, max_query_len: int) -> "Run":
+        """Rebuild a run from persisted arrays (no suffix sort)."""
+        run = cls(tail, codes, start=start, is_dna=is_dna,
+                  max_query_len=max_query_len)
+        if sa_padded is not None:
+            from repro.core.tablet import store_from_arrays
+            text = np.concatenate([run.tail, run.codes])
+            padded = np.pad(text, (0, bucket_rows(int(text.shape[0]))
+                                  - int(text.shape[0])))
+            run._store = store_from_arrays(
+                padded, np.asarray(sa_padded, np.int32), is_dna=is_dna,
+                max_query_len=max_query_len)
+            run._sa_host = np.asarray(run._store.sa)
+        return run
+
+    def match_positions(self, patt, plen) -> list[np.ndarray]:
+        """Global start positions, ascending, of exactly the occurrences
+        this run owns: ``start < g + plen <= end``."""
+        B = int(np.asarray(plen).shape[0])
+        if self.length == 0 or B == 0:
+            return [np.zeros((0,), np.int64)] * B
+        store = self._ensure_store()
+        return positions_in_bounds(store, self._sa_host, patt, plen,
+                                   offset=self.start - self.overlap,
+                                   lo=self.start, hi=self.end)

@@ -14,13 +14,19 @@ point; callers no longer hand-wire ``build_tablet_store`` + ``ScanPlanner``
   and the right mesh/planner are constructed internally;
 * reads (:meth:`count` / :meth:`contains` / :meth:`scan` / :meth:`locate`)
   delegate to the :class:`~repro.core.planner.ScanPlanner` for the base
-  index and merge in the memtable (below);
-* the write path: :meth:`append` lands codes in a single-device
-  :class:`~repro.api.memtable.Memtable`; reads fan out to base + memtable
-  and merge exact counts and positions, including matches straddling the
-  base/append boundary (overlap window — see docs/table_api.md);
-  :meth:`compact` folds the memtable into the base SA and bumps the
-  persisted version; :meth:`flush` makes un-compacted appends durable.
+  index and merge in the LSM delta tiers (below);
+* the write path is a real LSM stack: :meth:`append` lands codes in a
+  single-device :class:`~repro.api.memtable.Memtable`;
+  :meth:`minor_compact` seals the memtable into an immutable, persisted
+  :class:`~repro.api.runs.Run` (automatic at ``memtable_limit``); reads
+  fan out to base + runs + memtable and merge exact counts and positions,
+  each tier owning the occurrences that END in its region (the per-run
+  generalization of the ``g + plen > n_base`` straddle rule —
+  docs/table_api.md); :meth:`compact` (major compaction) folds runs and
+  memtable into the base SA **by merging** — prefix doubling over only
+  the dirty suffix range plus a batched window-compare merge
+  (:mod:`repro.api.compaction`), never a from-scratch rebuild — and bumps
+  the persisted version; :meth:`flush` makes un-compacted state durable.
 
 Multiple named tables live in one root directory under a
 :class:`~repro.api.catalog.Catalog` (Accumulo's METADATA analogue).
@@ -35,7 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.compaction import merge_delta_sa
 from repro.api.memtable import Memtable
+from repro.api.runs import Run, logical_tail
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import codec
 from repro.core.planner import ScanOutcome, ScanPlanner, TopKCache
@@ -67,12 +75,19 @@ def _check_name(name: str) -> str:
 
 
 def _as_codes(codes, is_dna: Optional[bool]):
-    """Normalize input text: DNA strings/bytes become uint8 codes."""
+    """Normalize input text: DNA strings/bytes become uint8 codes.
+
+    DNA is only *inferred* for uint8 arrays (what ``codec.encode_dna`` /
+    ``random_dna`` produce).  Any other integer dtype defaults to the
+    generic token path — a small-vocab token corpus must not silently
+    take the packed 2-bit codec; pass ``is_dna=True`` explicitly to opt
+    a non-uint8 code array into it."""
     if isinstance(codes, (str, bytes, bytearray)):
         return codec.encode_dna(codes), True
     codes = np.asarray(codes)
     if is_dna is None:
-        is_dna = bool(codes.size > 0 and codes.max() < 4)
+        is_dna = bool(codes.size > 0 and codes.dtype == np.uint8
+                      and codes.max() < 4)
     return codes, bool(is_dna)
 
 
@@ -96,6 +111,7 @@ class SuffixTable:
                  version: int = 0, cache_size: int = 4096, keep_n: int = 3,
                  capacity_factor: float = 2.0, routed_min_batch: int = 64,
                  memtable_limit: Optional[int] = None,
+                 max_runs: Optional[int] = None,
                  distributed_build: Optional[bool] = None,
                  _store: Optional[TabletStore] = None,
                  _planner: Optional[ScanPlanner] = None):
@@ -109,6 +125,8 @@ class SuffixTable:
         self.routed_min_batch = int(routed_min_batch)
         self.cache_size = int(cache_size)
         self.memtable_limit = memtable_limit
+        self.max_runs = max_runs
+        self.runs: list[Run] = []
         self._codes = np.asarray(codes)
 
         if _store is not None:                       # from_store: adopt as-is
@@ -164,7 +182,13 @@ class SuffixTable:
                is_dna: Optional[bool] = None, max_query_len: int = 128,
                overwrite: bool = False, **kw) -> "SuffixTable":
         """Build AND persist version 1 of a named table under ``root``,
-        registering it in the root's :class:`Catalog`."""
+        registering it in the root's :class:`Catalog`.
+
+        Crash-safe ordering: the catalog entry is written BEFORE the
+        snapshot, so a create that dies mid-persist leaves a *visible*
+        registered-but-empty table rather than an invisible orphan
+        directory; a later ``create`` of the same name reconciles such
+        remnants (no published snapshot) instead of refusing."""
         import shutil
         from repro.api.catalog import Catalog
         _check_name(name)
@@ -172,7 +196,12 @@ class SuffixTable:
         catalog = Catalog(root)
         table_dir = os.path.join(root, name)
         if name in catalog or os.path.isdir(table_dir):
-            if not overwrite:
+            # only a PUBLISHED snapshot makes the table real; a bare dir
+            # or catalog entry is a crashed create's remnant — reconcile
+            has_snapshot = (os.path.isdir(table_dir) and
+                            CheckpointManager(table_dir).latest_step()
+                            is not None)
+            if has_snapshot and not overwrite:
                 raise FileExistsError(
                     f"table {name!r} already exists in {root!r} — "
                     f"SuffixTable.open() it, or pass overwrite=True")
@@ -183,17 +212,19 @@ class SuffixTable:
         table = cls(codes, cls._build_sa_for(codes, max_query_len, is_dna),
                     is_dna=is_dna, max_query_len=max_query_len,
                     name=name, root=root, version=1, **kw)
-        table._persist()
         catalog.register(name, {"is_dna": table.is_dna,
                                 "max_query_len": table.max_query_len})
+        table._persist()
         return table
 
     @classmethod
     def open(cls, name: str, *, root: Optional[str] = None,
              **kw) -> "SuffixTable":
         """Restore the latest persisted version of ``name`` on the current
-        device count (the saved SA is re-padded; no rebuild).  Un-compacted
-        appends saved by :meth:`flush` are restored into the memtable."""
+        device count (the saved SA is re-padded; no rebuild).  Sealed runs
+        and un-compacted appends saved by :meth:`flush` /
+        :meth:`minor_compact` are restored too — run indexes come back
+        frozen from disk, never re-sorted."""
         _check_name(name)
         root = root or default_root()
         table_dir = os.path.join(root, name)
@@ -212,6 +243,13 @@ class SuffixTable:
                     max_query_len=int(extra["max_query_len"]),
                     name=name, root=root, version=int(extra["version"]),
                     **kw)
+        for i, rm in enumerate(extra.get("runs", [])):
+            table.runs.append(Run.restore(
+                arrays[f"run{i}_tail"], arrays[f"run{i}_codes"],
+                arrays.get(f"run{i}_sa"), start=int(rm["start"]),
+                is_dna=table.is_dna, max_query_len=table.max_query_len))
+        if table.runs:
+            table._reset_memtable()
         mem = arrays.get("mem_codes")
         if mem is not None and mem.size:
             table.memtable.append(mem)
@@ -245,12 +283,18 @@ class SuffixTable:
 
     # -- introspection -------------------------------------------------------
     def __len__(self) -> int:
-        """Total indexed symbols: base + un-compacted appends."""
-        return int(self._codes.shape[0]) + self.memtable.size
+        """Total indexed symbols: base + sealed runs + memtable."""
+        return self.n_logical + self.memtable.size
 
     @property
     def n_base(self) -> int:
         return int(self._codes.shape[0])
+
+    @property
+    def n_logical(self) -> int:
+        """Symbols covered by the immutable tiers (base + sealed runs) —
+        the memtable's boundary."""
+        return self.n_base + sum(r.length for r in self.runs)
 
     @property
     def is_persistent(self) -> bool:
@@ -258,8 +302,24 @@ class SuffixTable:
 
     def stats(self) -> dict:
         return {"name": self.name, "version": self.version,
-                "n_base": self.n_base, "memtable_rows": self.memtable.size,
+                "n_base": self.n_base, "runs": len(self.runs),
+                "run_rows": self.n_logical - self.n_base,
+                "memtable_rows": self.memtable.size,
                 "is_dna": self.is_dna, "planner": self.planner.stats.as_dict()}
+
+    def _reset_memtable(self) -> None:
+        """Fresh empty memtable whose overlap window is the tail of the
+        current logical text (base + sealed runs)."""
+        if not self.runs:
+            self.memtable = Memtable(self._codes, is_dna=self.is_dna,
+                                     max_query_len=self.max_query_len)
+            return
+        n = self.n_logical
+        tail = logical_tail([self._codes] + [r.codes for r in self.runs],
+                            min(self.max_query_len - 1, n))
+        self.memtable = Memtable(tail.astype(self._codes.dtype, copy=False),
+                                 is_dna=self.is_dna,
+                                 max_query_len=self.max_query_len, n_base=n)
 
     def _sa(self) -> np.ndarray:
         # the planner already caches a host copy of the same store.sa —
@@ -267,27 +327,57 @@ class SuffixTable:
         return self.planner._sa()
 
     # -- read path -----------------------------------------------------------
+    def _delta_positions(self, patt, plen) -> list[np.ndarray]:
+        """Fan a query batch out over the delta tiers (sealed runs, then
+        the memtable) and merge: per query, the ascending global start
+        positions of every occurrence the base index cannot see.  Each
+        occurrence ends in exactly one tier, so concatenation never
+        double-counts; straddles make per-tier ranges overlap, hence the
+        sort."""
+        plen_np = np.asarray(plen)
+        B = int(plen_np.shape[0])
+        empty = np.zeros((0,), np.int64)
+        tiers = [r for r in self.runs if r.length]
+        if self.memtable.size:
+            tiers.append(self.memtable)
+        if not tiers or B == 0:
+            return [empty] * B
+        per_tier = [t.match_positions(patt, plen) for t in tiers]
+        out = []
+        for i in range(B):
+            gs = [p[i] for p in per_tier if p[i].size]
+            if not gs:
+                out.append(empty)
+            elif len(gs) == 1:
+                out.append(gs[0])
+            else:
+                g = np.concatenate(gs)
+                g.sort()
+                out.append(g)
+        return out
+
     def scan_encoded(self, patt, plen, *, mode: Optional[str] = None
                      ) -> MatchResult:
         """Exact merged scan of an encoded batch (see ``ScanPlanner.
-        scan_encoded`` for encodings).  With an empty memtable this is a
-        pure delegation; otherwise ``count`` adds the memtable-only
-        occurrences, and ``first_pos`` of a base miss becomes the smallest
-        straddle/append position.  ``first_rank`` always refers to the
-        BASE suffix array (−1 when the only matches are in the memtable)
-        — do not feed a merged result to ``planner.positions_from_result``,
-        use :meth:`scan`/:meth:`locate` for merged enumeration."""
+        scan_encoded`` for encodings).  With no runs and an empty memtable
+        this is a pure delegation; otherwise ``count`` adds the run/
+        memtable-only occurrences and ``first_pos`` is the smallest of the
+        base's reported position and every delta-tier occurrence position.
+        ``first_rank`` always refers to the BASE suffix array (−1 when the
+        only matches are in the delta tiers) — do not feed a merged result
+        to ``planner.positions_from_result``, use :meth:`scan`/
+        :meth:`locate` for merged enumeration."""
         base = self.planner.scan_encoded(patt, plen, mode=mode)
-        if self.memtable.size == 0:
+        if not self.runs and self.memtable.size == 0:
             return base
-        extra = self.memtable.match_positions(patt, plen)
+        extra = self._delta_positions(patt, plen)
         count = np.asarray(base.count).astype(np.int64)
         first_pos = np.asarray(base.first_pos).astype(np.int64)
         for i, g in enumerate(extra):
             if g.size:
                 count[i] += g.size
-                if first_pos[i] < 0:
-                    first_pos[i] = int(g[0])
+                first_pos[i] = (int(g[0]) if first_pos[i] < 0
+                                else min(int(first_pos[i]), int(g[0])))
         found = count > 0
         return MatchResult(found=jnp.asarray(found),
                            count=jnp.asarray(count),
@@ -319,7 +409,7 @@ class SuffixTable:
         if miss_idx:
             patt, plen = self.planner.encode([patterns[i] for i in miss_idx])
             base = self.planner.scan_encoded(patt, plen)
-            extra = self.memtable.match_positions(patt, plen)
+            extra = self._delta_positions(patt, plen)
             base_count = np.asarray(base.count).astype(np.int64)
             base_rank = np.asarray(base.first_rank)
             sa, pad = self._sa(), self.store.pad_count
@@ -366,7 +456,8 @@ class SuffixTable:
     def append(self, codes) -> int:
         """Append text to the table (memtable write path); visible to all
         subsequent reads with exact merged counts.  Returns the memtable
-        size; triggers :meth:`compact` at ``memtable_limit``."""
+        size; triggers :meth:`minor_compact` at ``memtable_limit`` (and,
+        through it, :meth:`compact` at ``max_runs``)."""
         if isinstance(codes, (str, bytes, bytearray)):
             if not self.is_dna:
                 raise TypeError("string appends are DNA-only; pass a code "
@@ -376,39 +467,75 @@ class SuffixTable:
         self._cache.clear()
         if (self.memtable_limit is not None
                 and self.memtable.size >= self.memtable_limit):
-            self.compact()
+            self.minor_compact()
         return self.memtable.size
 
-    def compact(self) -> int:
-        """Fold the memtable into the base suffix array (full rebuild over
-        the concatenated text — distributed when the table has a mesh),
-        clear the memtable, bump and persist the version.  No-op on an
-        empty memtable.  Returns the current version."""
+    def minor_compact(self) -> int:
+        """Seal the active memtable into an immutable
+        :class:`~repro.api.runs.Run` and start a fresh one, so appends
+        stay fast (the rebuilt-per-read memtable index never grows past
+        ``memtable_limit``) without losing read visibility.  Persistent
+        tables re-publish the snapshot (same version) so the sealed run
+        is durable.  No-op on an empty memtable.  Returns the number of
+        live runs; when ``max_runs`` is reached the runs are folded into
+        the base via :meth:`compact` first."""
         if self.memtable.size == 0:
+            return len(self.runs)
+        self.runs.append(Run.from_memtable(self.memtable))
+        self._reset_memtable()
+        self._cache.clear()
+        if self.max_runs is not None and len(self.runs) >= self.max_runs:
+            self.compact()
+        elif self._manager is not None:
+            self._persist()
+        return len(self.runs)
+
+    def _delta_codes(self) -> np.ndarray:
+        """All un-compacted symbols (sealed runs + memtable), in order."""
+        parts = [r.codes for r in self.runs]
+        if self.memtable.size:
+            parts.append(self.memtable.appended)
+        if not parts:
+            return np.zeros((0,), self._codes.dtype)
+        return np.concatenate(
+            [p.astype(self._codes.dtype, copy=False) for p in parts])
+
+    def compact(self) -> int:
+        """Major compaction: fold every sealed run plus the memtable into
+        the base suffix array, clear the delta tiers, bump and persist
+        the version.  Single-device tables MERGE (prefix doubling over
+        only the dirty suffix range + batched window-compare insertion —
+        see :mod:`repro.api.compaction`) so a small delta compacts far
+        faster than a from-scratch build; tables with a live mesh keep
+        the distributed full rebuild (the merge is a host-side path).
+        No-op when there is nothing to fold.  Returns the version."""
+        delta = self._delta_codes()
+        if delta.size == 0:
             return self.version
-        combined = np.concatenate(
-            [self._codes, self.memtable.appended.astype(self._codes.dtype,
-                                                        copy=False)])
+        combined = np.concatenate([self._codes, delta])
         if self.mesh is not None and self._distributed_build:
             sa_real = self.__class__._build_sa_for(
                 combined, self.max_query_len, self.is_dna)
         else:
-            sa_real = np.asarray(
-                build_suffix_array(combined.astype(np.int32)))
+            pad = self.store.pad_count
+            sa_real = merge_delta_sa(
+                combined, self.n_base, np.asarray(self.store.sa)[pad:],
+                is_dna=self.is_dna, max_query_len=self.max_query_len)
         self._codes = combined
         self._attach(combined, sa_real)
-        self.memtable = Memtable(combined, is_dna=self.is_dna,
-                                 max_query_len=self.max_query_len)
+        self.runs = []
+        self._reset_memtable()
         self._cache.clear()
         self.version += 1
         self._persist()
         return self.version
 
     def flush(self) -> None:
-        """Persist the current state — base arrays AND un-compacted
-        memtable codes — without compacting (same version, re-published
-        atomically).  :meth:`open` restores the memtable.  Raises on an
-        in-memory table: durability is this method's entire contract."""
+        """Persist the current state — base arrays, sealed runs, AND
+        un-compacted memtable codes — without compacting (same version,
+        re-published atomically).  :meth:`open` restores all of it.
+        Raises on an in-memory table: durability is this method's entire
+        contract."""
         if self._manager is None:
             raise RuntimeError(
                 "flush() on a non-persistent table — build it with "
@@ -418,16 +545,29 @@ class SuffixTable:
     def _persist(self) -> None:
         if self._manager is None:
             return
-        pad = self.store.pad_count
-        sa_real = np.asarray(self.store.sa)[pad:]
+        sa_real = self._sa()[self.store.pad_count:]
         state = {"codes": self._codes,
                  "sa_real": sa_real,
                  "mem_codes": self.memtable.appended}
+        runs_meta = []
+        for i, r in enumerate(self.runs):
+            state[f"run{i}_tail"] = r.tail
+            state[f"run{i}_codes"] = r.codes
+            state[f"run{i}_sa"] = r.sa_padded   # frozen index, no re-sort
+            runs_meta.append({"start": r.start, "length": r.length,
+                              "overlap": r.overlap})
         extra = {"kind": "suffix_table", "name": self.name,
                  "version": self.version, "is_dna": self.is_dna,
                  "max_query_len": self.max_query_len,
-                 "n_base": self.n_base, "mem_len": self.memtable.size}
-        self._manager.save(self.version, state, extra=extra)
+                 "n_base": self.n_base, "runs": runs_meta,
+                 "mem_len": self.memtable.size}
+        # always publish under a FRESH step: CheckpointManager.save on an
+        # existing step rmtree's it before the rename, so re-publishing
+        # the same version in place (flush / every automatic seal) would
+        # open a crash window with zero live snapshots.  The step is a
+        # plain publish sequence; the table version rides in ``extra``.
+        step = (self._manager.latest_step() or 0) + 1
+        self._manager.save(step, state, extra=extra)
 
 
 # Back-compat: the pre-table spelling, one call deep.

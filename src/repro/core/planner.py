@@ -152,10 +152,11 @@ class TopKCache:
 class ScanOutcome:
     """Host-side result of a string-level scan: exact counts always.
 
-    ``positions`` is present when ``top_k > 0``: shape (B, top_k) int32,
+    ``positions`` is present when ``top_k > 0``: shape (B, top_k) int64,
     row i holding up to ``min(count[i], top_k)`` occurrence positions in
     suffix-rank order (lexicographically smallest matching suffix first),
-    padded with -1.
+    padded with -1.  (``SuffixTable.scan`` fills the same shape in
+    text order instead — smallest positions first.)
     """
     found: np.ndarray        # (B,)  bool
     count: np.ndarray        # (B,)  int64

@@ -78,9 +78,10 @@ def store_from_arrays(codes, sa_real, *, is_dna: bool,
     minimal symbols and shorter runs are prefixes, so they sort ascending
     by run length, i.e. positions n_pad-1, n_pad-2, ..., n_real.
 
-    ``min_rows`` raises n_pad beyond the num_tablets multiple (the
-    memtable uses power-of-two buckets so jitted queries recompile
-    O(log appends) times, not once per append).
+    ``min_rows`` raises n_pad beyond the num_tablets multiple.  (The
+    memtable/run stores no longer use it — ``n_real`` is a static jit
+    field, so they bucket the TEXT itself instead; see
+    ``repro.api.runs.padded_segment_store``.)
     """
     codes = np.asarray(codes)
     sa_real = np.asarray(sa_real, np.int32)

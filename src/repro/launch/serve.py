@@ -6,7 +6,9 @@ random-pattern scans through ``HedgedScanService`` (scan-planner execution
 with sentinel retry, plus the table's merged base+memtable reads) and
 prints the paper's Table III/IV statistics, with and without hedged reads.
 Finishes with the write path: append a planted segment, show the exact
-merged count, compact, and report the bumped version.
+merged count, seal it into an immutable run (minor compaction), then
+merge-fold into the base (major compaction) and report the bumped version.
+``--memtable-limit`` / ``--max-runs`` make both compactions automatic.
 
     PYTHONPATH=src python -m repro.launch.serve --text-len 200000 \
         --queries 10000 --batch 512
@@ -36,6 +38,12 @@ def main(argv=None):
     ap.add_argument("--capacity-factor", type=float, default=2.0)
     ap.add_argument("--top-k", type=int, default=5,
                     help="positions per query in the locate demo")
+    ap.add_argument("--memtable-limit", type=int, default=None,
+                    help="seal the memtable into an immutable run (minor "
+                         "compaction) once it reaches this many symbols")
+    ap.add_argument("--max-runs", type=int, default=None,
+                    help="fold runs into the base (major compaction, "
+                         "merge-based) once this many are live")
     ap.add_argument("--root", default=None,
                     help="catalog root dir; omit for an in-memory table")
     ap.add_argument("--table", default="dna_serve",
@@ -44,33 +52,41 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     n_dev = len(jax.devices())
+    lsm = {"memtable_limit": args.memtable_limit, "max_runs": args.max_runs}
     t0 = time.time()
     if args.root is not None and args.table in Catalog(args.root):
         print(f"[open ] table {args.table!r} from {args.root} "
               f"({n_dev} device(s)) ...", flush=True)
         table = SuffixTable.open(args.table, root=args.root,
-                                 capacity_factor=args.capacity_factor)
+                                 capacity_factor=args.capacity_factor, **lsm)
         print(f"[open ] v{table.version}, {len(table)} bases "
-              f"in {time.time() - t0:.1f}s (no rebuild)")
+              f"({len(table.runs)} run(s)) in {time.time() - t0:.1f}s "
+              f"(no rebuild)")
     else:
         print(f"[build] suffix array over {args.text_len} bases "
               f"({n_dev} device(s)) ...", flush=True)
         codes = random_dna(args.text_len, seed=args.seed)
         if args.root is None:
             table = SuffixTable.from_codes(
-                codes, is_dna=True, capacity_factor=args.capacity_factor)
+                codes, is_dna=True, capacity_factor=args.capacity_factor,
+                **lsm)
         else:
             table = SuffixTable.create(
                 args.table, codes, root=args.root, is_dna=True,
-                capacity_factor=args.capacity_factor)
+                capacity_factor=args.capacity_factor, **lsm)
         dt = time.time() - t0
         print(f"[build] done in {dt:.1f}s "
               f"({args.text_len / max(dt, 1e-9) / 1e6:.2f} Mbase/s)")
 
+    # clamp to the table's pattern cap: run_workload validates up front
+    max_pattern = min(args.max_pattern, table.max_query_len)
+    if max_pattern < args.max_pattern:
+        print(f"[clamp ] --max-pattern {args.max_pattern} -> {max_pattern} "
+              f"(table max_query_len)")
     svc = HedgedScanService(table, replicas=args.replicas)
     for hedged in (False, True):
         stats = svc.run_workload(args.queries, batch=args.batch,
-                                 max_len=args.max_pattern, hedged=hedged,
+                                 max_len=max_pattern, hedged=hedged,
                                  seed=args.seed)
         mode = "hedged" if hedged else "single"
         print(f"[{mode:6s}] n={stats['n']} mean={stats['mean_ms']:.3f}ms "
@@ -90,15 +106,19 @@ def main(argv=None):
 
     print(f"[table ] {table.stats()}")
 
-    # the write path: append, merged read, compact (compaction rebuilds
-    # the planner, so the workload stats above are printed first)
+    # the write path: append, merged read, minor compaction (seal to an
+    # immutable run), then major compaction (merge-fold into the base —
+    # rebuilds the planner, so the workload stats above are printed first)
     planted = "GATTACA" * 3
     before = int(table.count([planted])[0])
     table.append(planted + decode_dna(random_dna(993, seed=args.seed + 1)))
     after = int(table.count([planted])[0])
+    n_runs = table.minor_compact()
+    sealed = int(table.count([planted])[0])
     v = table.compact()
     print(f"[write ] append 1000 bases: count({planted[:10]}...) "
-          f"{before} -> {after} (merged read); compacted to v{v}")
+          f"{before} -> {after} (merged read); sealed into run "
+          f"#{n_runs} (count still {sealed}); major-compacted to v{v}")
 
 
 if __name__ == "__main__":

@@ -149,7 +149,21 @@ class HedgedScanService:
                      min_len: int = 1, max_len: int = 100,
                      hedged: bool = True, seed: int = 0):
         """The paper's §V workload: random patterns, uniform length.
-        Returns dict of Table III/IV statistics."""
+        Returns dict of Table III/IV statistics.
+
+        ``max_len`` is validated against the served table's pattern cap
+        up front — the planner rejects over-cap patterns per batch, so an
+        invalid workload would otherwise crash midway with partial work
+        done and an opaque traceback."""
+        cap = int(self.planner.max_pattern_len)
+        if max_len > cap:
+            raise ValueError(
+                f"run_workload max_len={max_len} exceeds the table's "
+                f"pattern cap {cap} (its max_query_len); clamp max_len "
+                f"or rebuild the table with a larger max_query_len")
+        if not 1 <= min_len <= max_len:
+            raise ValueError(f"need 1 <= min_len <= max_len, got "
+                             f"min_len={min_len} max_len={max_len}")
         lat_all, out_all, len_all = [], [], []
         done = 0
         b = 0

@@ -1,0 +1,327 @@
+"""The LSM run tier: minor/major compaction and write-path regressions.
+
+Load-bearing properties:
+
+* after ANY schedule of appends, minor compactions (memtable sealed into
+  immutable runs), and major compactions (runs merge-folded into the
+  base), merged reads — counts, smallest position, top-k positions —
+  exactly match the paper's Algorithm 1 brute force over the concatenated
+  text, including occurrences straddling every tier boundary;
+* major compaction MERGES (``repro.api.compaction``): for texts with no
+  depth-``max_query_len`` window collisions the merged suffix array is
+  bit-identical to a from-scratch build, and for adversarial repetitive
+  text (where tie order inside equal-window blocks is free) counts and
+  position sets stay exact;
+* a persistence round trip with live runs restores the same table.
+
+Plus regression tests for the write-path bugfixes shipped alongside
+(negative-code appends, merged ``first_pos``, uint8-only DNA inference,
+``run_workload`` length validation, crash-safe ``create`` registration).
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.api import Catalog, SuffixTable
+from repro.api.compaction import merge_delta_sa
+from repro.core import codec, query as Q
+from repro.core.suffix_array import build_suffix_array
+from repro.serving import HedgedScanService
+
+
+def _oracle(codes: np.ndarray, pattern: str):
+    """(count, first_pos=smallest position, all positions) by Algorithm 1."""
+    cc = np.asarray(codes).astype(np.int32)
+    pc = codec.encode_dna(pattern).astype(np.int32)
+    k = len(pc)
+    pos = [i for i in range(len(cc) - k + 1)
+           if (cc[i:i + k] == pc).all()]
+    return len(pos), (pos[0] if pos else -1), pos
+
+
+def _check_vs_oracle(table, combined, patterns, top_k=16):
+    out = table.scan(patterns, top_k=top_k)
+    for i, p in enumerate(patterns):
+        want, first, pos = _oracle(combined, p)
+        assert int(out.count[i]) == want, (p, int(out.count[i]), want)
+        assert int(out.first_pos[i]) == first, (p, "first_pos")
+        got = [int(x) for x in out.positions[i] if x >= 0]
+        assert got == pos[:top_k], p
+
+
+def _boundary_patterns(combined, boundaries, maxlen=12):
+    """Patterns planted to straddle each tier boundary."""
+    pats = []
+    for b in boundaries:
+        for off in (1, 3, 7):
+            lo, hi = b - off, b - off + min(off + 5, maxlen)
+            if 0 <= lo and hi <= len(combined) and hi > lo:
+                pats.append(codec.decode_dna(combined[lo:hi]))
+    return pats
+
+
+# ---------------------------------------------------------------------------
+# the run tier: seal / fan-out reads / merge-fold
+# ---------------------------------------------------------------------------
+def test_minor_compaction_reads_stay_exact_across_runs():
+    base = codec.random_dna(2500, seed=0)
+    t = SuffixTable.from_codes(base, is_dna=True)
+    combined = base
+    boundaries = [len(base)]
+    for step in range(4):
+        app = codec.random_dna(130 + 40 * step, seed=50 + step)
+        t.append(app)
+        combined = np.concatenate([combined, app])
+        if step < 3:                       # leave the last append unsealed
+            t.minor_compact()
+            boundaries.append(len(combined))
+    assert len(t.runs) == 3 and t.memtable.size > 0
+    assert len(t) == len(combined) and t.n_base == 2500
+    pats = (Q.random_patterns(10, 1, 8, seed=60)
+            + _boundary_patterns(combined, boundaries))
+    _check_vs_oracle(t, combined, pats)
+    # encoded reads merge the same way, min-position first_pos included
+    patt, plen = t.planner.encode(pats)
+    res = t.scan_encoded(patt, plen)
+    for i, p in enumerate(pats):
+        want, _, _ = _oracle(combined, p)
+        assert int(res.count[i]) == want, p
+    # sealing the live memtable changes nothing about the answers
+    t.minor_compact()
+    assert t.memtable.size == 0 and len(t.runs) == 4
+    _check_vs_oracle(t, combined, pats)
+
+
+def test_major_compaction_merge_equals_full_rebuild():
+    """For random DNA at depth 128 no two windows collide, so the merged
+    SA must be BIT-IDENTICAL to a from-scratch build."""
+    base = codec.random_dna(3000, seed=1)
+    t = SuffixTable.from_codes(base, is_dna=True)
+    combined = base
+    for s in range(3):
+        app = codec.random_dna(100 + 30 * s, seed=70 + s)
+        t.append(app)
+        combined = np.concatenate([combined, app])
+        t.minor_compact()
+    assert t.compact() == 1 and not t.runs and t.memtable.size == 0
+    ref = np.asarray(build_suffix_array(combined.astype(np.int32)))
+    got = np.asarray(t.store.sa)[t.store.pad_count:]
+    assert (got == ref).all()
+    _check_vs_oracle(t, combined,
+                     Q.random_patterns(8, 1, 9, seed=80)
+                     + _boundary_patterns(combined, [3000, 3100, 3230]))
+
+
+def test_merge_delta_sa_token_path_equals_rebuild():
+    rng = np.random.default_rng(2)
+    base = rng.integers(0, 500, 1500).astype(np.int32)
+    delta = rng.integers(0, 500, 120).astype(np.int32)
+    combined = np.concatenate([base, delta])
+    base_sa = np.asarray(build_suffix_array(base))
+    got = merge_delta_sa(combined, 1500, base_sa, is_dna=False,
+                         max_query_len=32)
+    ref = np.asarray(build_suffix_array(combined))
+    assert (got == ref).all()
+
+
+def test_merge_compaction_repetitive_text_counts_exact():
+    """Adversarial repeats: every suffix of 'AAA...' shares windows, so
+    the depth-capped merge may order tie blocks differently from a full
+    build — counts and position SETS must stay exact regardless."""
+    aa = np.zeros(300, np.uint8)                    # 'A' * 300
+    t = SuffixTable.from_codes(aa, is_dna=True, max_query_len=16)
+    t.append(np.zeros(50, np.uint8))
+    t.minor_compact()
+    t.append(codec.encode_dna("ACGTACGTAAAC"))
+    combined = np.concatenate([aa, np.zeros(50, np.uint8),
+                               codec.encode_dna("ACGTACGTAAAC")])
+    pats = ["A", "AA", "AAAA", "A" * 15, "ACGT", "AAC", "CGTA", "TACG"]
+    _check_vs_oracle(t, combined, pats, top_k=8)
+    t.compact()
+    _check_vs_oracle(t, combined, pats, top_k=8)
+
+
+def test_compact_with_memtable_only_still_merges():
+    """No runs sealed: major compaction merges the bare memtable too."""
+    base = codec.random_dna(2000, seed=3)
+    t = SuffixTable.from_codes(base, is_dna=True)
+    app = codec.random_dna(90, seed=4)
+    t.append(app)
+    combined = np.concatenate([base, app])
+    assert t.compact() == 1
+    ref = np.asarray(build_suffix_array(combined.astype(np.int32)))
+    got = np.asarray(t.store.sa)[t.store.pad_count:]
+    assert (got == ref).all()
+
+
+@given(st.integers(0, 10_000), st.integers(1, 4))
+@settings(max_examples=4, deadline=None)
+def test_property_lsm_schedule_matches_from_scratch(seed, n_steps):
+    """Property: ANY append/seal/major schedule == a from-scratch store."""
+    rng = np.random.default_rng(seed)
+    base = codec.random_dna(int(rng.integers(300, 800)), seed=seed)
+    t = SuffixTable.from_codes(base, is_dna=True)
+    combined = base
+    boundaries = [len(base)]
+    for s in range(n_steps):
+        app = codec.random_dna(int(rng.integers(40, 160)),
+                               seed=seed * 13 + s)
+        t.append(app)
+        combined = np.concatenate([combined, app])
+        op = rng.integers(0, 3)
+        if op == 1:
+            t.minor_compact()
+            boundaries.append(len(combined))
+        elif op == 2:
+            t.compact()
+            boundaries = [len(combined)]
+    pats = (Q.random_patterns(6, 1, 9, seed=seed + 1)
+            + _boundary_patterns(combined, boundaries))
+    fresh = SuffixTable.from_codes(combined, is_dna=True)
+    out, ref = t.scan(pats, top_k=8), fresh.scan(pats, top_k=8)
+    assert (out.count == ref.count).all()
+    assert (out.first_pos == ref.first_pos).all()
+    assert (out.positions == ref.positions).all()
+
+
+def test_persistence_round_trip_with_live_runs(tmp_path):
+    base = codec.random_dna(1200, seed=5)
+    t = SuffixTable.create("lsm", base, root=str(tmp_path))
+    combined = base
+    for s in range(2):
+        app = codec.random_dna(100, seed=90 + s)
+        t.append(app)
+        combined = np.concatenate([combined, app])
+        t.minor_compact()                  # persists the sealed run
+    tail = codec.random_dna(60, seed=99)
+    t.append(tail)
+    combined = np.concatenate([combined, tail])
+    t.flush()
+    t2 = SuffixTable.open("lsm", root=str(tmp_path))
+    assert len(t2.runs) == 2 and t2.memtable.size == 60
+    assert t2.version == 1 and len(t2) == len(combined)
+    pats = (Q.random_patterns(10, 1, 9, seed=100)
+            + _boundary_patterns(combined, [1200, 1300, 1400]))
+    a, b = t.scan(pats, top_k=8), t2.scan(pats, top_k=8)
+    assert (a.count == b.count).all()
+    assert (a.first_pos == b.first_pos).all()
+    assert (a.positions == b.positions).all()
+    _check_vs_oracle(t2, combined, pats)
+    # major compaction on the REOPENED table (runs restored frozen)
+    v = t2.compact()
+    assert v == 2 and not t2.runs
+    _check_vs_oracle(t2, combined, pats)
+    t3 = SuffixTable.open("lsm", root=str(tmp_path))
+    assert t3.version == 2 and t3.n_base == len(combined) and not t3.runs
+
+
+# ---------------------------------------------------------------------------
+# write-path bugfix regressions
+# ---------------------------------------------------------------------------
+def test_append_rejects_negative_codes():
+    """Regression: negative codes passed the DNA range check (only max
+    was validated) and silently wrapped on the uint8 astype."""
+    t = SuffixTable.from_codes(codec.random_dna(200, seed=0), is_dna=True)
+    with pytest.raises(ValueError, match="non-negative"):
+        t.append(np.array([-1, 2, 3]))
+    assert t.memtable.size == 0            # nothing landed
+    tok = SuffixTable.from_codes(
+        np.arange(100, dtype=np.int32) % 50, is_dna=False)
+    with pytest.raises(ValueError, match="non-negative"):
+        tok.append(np.array([3, -7]))
+
+
+def test_scan_encoded_first_pos_is_min_across_tiers():
+    """Merged ``first_pos`` is the smallest of the base's reported
+    position and every run/memtable occurrence (the documented min rule);
+    on a base miss it must be the first DELTA-tier occurrence, with
+    ``first_rank`` staying −1."""
+    base = codec.random_dna(600, seed=6)
+    t = SuffixTable.from_codes(base, is_dna=True)
+    probe = "GATTACAGG"
+    # run 0: occurrence late in its appended region
+    app0 = codec.decode_dna(codec.random_dna(40, seed=7)) + probe
+    t.append(app0)
+    t.minor_compact()
+    # memtable: a second occurrence right after the run boundary
+    t.append(probe + codec.decode_dna(codec.random_dna(30, seed=8)))
+    combined = np.concatenate([base, codec.encode_dna(app0),
+                               codec.encode_dna(probe),
+                               codec.random_dna(30, seed=8)])
+    want, first, _ = _oracle(combined, probe)
+    patt, plen = t.planner.encode([probe])
+    res = t.scan_encoded(patt, plen)
+    assert int(res.count[0]) == want == 2
+    assert int(res.first_pos[0]) == first  # smallest across both tiers
+    assert int(res.first_rank[0]) == -1    # base missed entirely
+
+
+def test_as_codes_infers_dna_for_uint8_only():
+    """Regression: ANY small-vocab integer corpus used to silently take
+    the packed DNA codec; now only uint8 arrays are inferred as DNA."""
+    small_vocab = np.array([0, 1, 2, 3, 0, 1, 2, 0, 3, 1] * 30,
+                           dtype=np.int64)
+    t = SuffixTable.from_codes(small_vocab)
+    assert t.is_dna is False               # token path
+    import jax.numpy as jnp
+    w = small_vocab[5:13].astype(np.int32)
+    res = t.scan_encoded(jnp.asarray(w[None]), jnp.asarray([8]))
+    assert int(res.count[0]) >= 1
+    assert SuffixTable.from_codes(codec.random_dna(64, seed=0)).is_dna
+    # the explicit flag still opts non-uint8 arrays into the DNA codec
+    assert SuffixTable.from_codes(small_vocab.astype(np.int32)[:64],
+                                  is_dna=True).is_dna
+
+
+def test_run_workload_validates_max_len_up_front():
+    """Regression: an over-cap max_len used to crash mid-workload (after
+    partial batches) inside the planner's length validation."""
+    t = SuffixTable.from_codes(codec.random_dna(500, seed=9), is_dna=True,
+                               max_query_len=32)
+    svc = HedgedScanService(t, seed=1)
+    with pytest.raises(ValueError, match="max_len=100 exceeds"):
+        svc.run_workload(200, batch=50)    # default max_len=100 > cap 32
+    with pytest.raises(ValueError, match="min_len"):
+        svc.run_workload(200, batch=50, min_len=0, max_len=8)
+    stats = svc.run_workload(100, batch=50, max_len=32)   # at cap: fine
+    assert stats["n"] == 100
+
+
+def test_create_registration_is_crash_safe(tmp_path):
+    """Regression: create() registered the table only AFTER persisting,
+    so a crash in between left an orphan directory that blocked
+    re-create but was invisible to catalog.list_tables()."""
+    codes = codec.random_dna(300, seed=10)
+    # simulate the old failure mode: a table dir with no published snapshot
+    os.makedirs(tmp_path / "crashed" / "step_0000000001.tmp")
+    t = SuffixTable.create("crashed", codes, root=str(tmp_path))
+    assert t.version == 1
+    assert int(SuffixTable.open("crashed", root=str(tmp_path))
+               .count(["ACGT"])[0]) >= 0
+    # crash BETWEEN register and persist: the remnant is now visible in
+    # the catalog (register-then-persist) and a re-create reconciles it
+    class _Boom(RuntimeError):
+        pass
+
+    orig = SuffixTable._persist
+    try:
+        def boom(self):
+            raise _Boom()
+        SuffixTable._persist = boom
+        with pytest.raises(_Boom):
+            SuffixTable.create("half", codes, root=str(tmp_path))
+    finally:
+        SuffixTable._persist = orig
+    cat = Catalog(str(tmp_path))
+    assert "half" in cat.list_tables()     # visible, not an orphan
+    t2 = SuffixTable.create("half", codes, root=str(tmp_path))  # reconciled
+    assert t2.version == 1
+    # a COMPLETE table still refuses duplicate creation
+    with pytest.raises(FileExistsError):
+        SuffixTable.create("half", codes, root=str(tmp_path))

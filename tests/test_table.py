@@ -223,13 +223,20 @@ def test_compact_bumps_version_and_reopens(tmp_path):
     assert t2.version == 2 and t2.n_base == 1000 and t2.memtable.size == 0
 
 
-def test_memtable_limit_auto_compacts():
+def test_memtable_limit_seals_runs_and_max_runs_majors():
+    """``memtable_limit`` now triggers MINOR compaction (seal to an
+    immutable run, base untouched); ``max_runs`` triggers the major fold."""
     t = SuffixTable.from_codes(codec.random_dna(500, seed=9), is_dna=True,
-                               memtable_limit=100)
+                               memtable_limit=100, max_runs=2)
     t.append(codec.random_dna(60, seed=1))
-    assert t.memtable.size == 60 and t.version == 0
-    t.append(codec.random_dna(60, seed=2))     # crosses the limit
-    assert t.memtable.size == 0 and t.version == 1 and t.n_base == 620
+    assert t.memtable.size == 60 and t.version == 0 and not t.runs
+    t.append(codec.random_dna(60, seed=2))     # crosses the limit: seal
+    assert t.memtable.size == 0 and len(t.runs) == 1
+    assert t.version == 0 and t.n_base == 500  # minor: base untouched
+    assert len(t) == 620
+    t.append(codec.random_dna(120, seed=3))    # second seal hits max_runs
+    assert t.memtable.size == 0 and not t.runs
+    assert t.version == 1 and t.n_base == 740  # major: folded into base
 
 
 def test_token_table_append_and_encoded_reads():

@@ -1,9 +1,10 @@
 """LM-pipeline integration: suffix-array dedup + contamination search over
 a token corpus (DESIGN.md §3) — the paper's scan engine as training-data
-infrastructure, served from a named table in a ``repro.api.Catalog``
-(DNA and token corpora share one root, like Accumulo tables share one
-instance).  Contamination checks go through the table's merged read path,
-so tokens appended after the build are searched too.
+infrastructure, served from a named table behind a ``repro.api.Database``
+handle (DNA and token corpora share one root, like Accumulo tables share
+one instance).  Contamination checks go through the table's merged read
+path, so tokens appended after the build are searched too; the eval-leak
+lookup at the end rides a typed raw-codes ``Query`` through the client.
 
     PYTHONPATH=src python examples/corpus_dedup.py
 """
@@ -11,7 +12,7 @@ import tempfile
 
 import numpy as np
 
-from repro.api import Catalog
+from repro.api import Database, Query
 from repro.core import dedup
 
 rng = np.random.default_rng(0)
@@ -24,10 +25,10 @@ eval_window = docs[3][100:140].copy()        # eval n-gram leaked into train
 tokens = np.concatenate(docs)
 doc_ids = np.repeat(np.arange(len(docs)), 400)
 
-catalog = Catalog(tempfile.mkdtemp(prefix="repro_tables_"))
-table = catalog.create_table("train_tokens", tokens, is_dna=False,
-                             max_query_len=64)
-print(f"catalog {catalog.root}: {catalog.list_tables()}")
+db = Database(tempfile.mkdtemp(prefix="repro_tables_"))
+table = db.create_table("train_tokens", tokens, is_dna=False,
+                        max_query_len=64)
+print(f"database {db.root}: {db.list_tables()}")
 
 scores = dedup.doc_dup_scores(table, doc_ids, min_len=48)
 keep = dedup.filter_duplicate_docs(table, doc_ids, min_len=48)
@@ -42,9 +43,19 @@ clean = dedup.contamination_check(
     table, rng.integers(32000, 64000, 40).astype(np.int32)[None, :])
 print(f"random window contaminated: {bool(clean[0])} (expected False)")
 
+# the same leak lookup as a typed raw-codes client query: token tables
+# take int32 code rows padded to the table's query cap, plus row lengths
+w = np.zeros((1, table.max_query_len), np.int32)
+w[0, :eval_window.size] = eval_window
+res = db.query(Query(table="train_tokens", kind="count", codes=w,
+                     lens=np.array([eval_window.size], np.int32)))
+print(f"typed Query count of the leaked window: {int(res.value[0])}")
+assert int(res.value[0]) >= 1
+
 # a late-arriving training shard: append is searched without a rebuild
 late_window = rng.integers(0, 32000, 40).astype(np.int32)
 assert not dedup.contamination_check(table, late_window[None, :])[0]
 table.append(late_window)
 assert dedup.contamination_check(table, late_window[None, :])[0]
 print("appended shard visible to contamination search (merged read)")
+db.close()

@@ -1,8 +1,10 @@
-"""The paper's case study end-to-end (§IV-V), through ``repro.api``:
-chromosome-scale DNA ingest into a persisted ``SuffixTable``, single-process
-and 50-user scan workloads, Table III/IV/V statistics, the hedged-read tail
-fix — then the beyond-paper write path: append new sequence, merged-read
-exact counts, compact, and re-open from disk.
+"""The paper's case study end-to-end (§IV-V), through the client frontend:
+chromosome-scale DNA ingest into a persisted ``SuffixTable`` behind a
+``repro.api.Database`` handle, single-process and 50-user scan workloads,
+Table III/IV/V statistics, the hedged-read tail fix — then the
+beyond-paper surface: typed locate queries, paged ``ReadSession``
+streaming with a mid-stream cursor resume, append with merged-read exact
+counts, compact, and re-open from disk.
 
     PYTHONPATH=src python examples/dna_search.py --text-len 300000
 """
@@ -10,7 +12,7 @@ import argparse
 import tempfile
 import time
 
-from repro.api import SuffixTable
+from repro.api import Database, Query, SuffixTable
 from repro.core.codec import decode_dna, random_dna
 from repro.serving import HedgedScanService
 
@@ -21,16 +23,17 @@ def main():
     ap.add_argument("--queries", type=int, default=10_000)
     args = ap.parse_args()
 
-    root = tempfile.mkdtemp(prefix="repro_tables_")
+    db = Database(tempfile.mkdtemp(prefix="repro_tables_"))
+    root = db.root
     print(f"[ingest] {args.text_len} bases (paper: chr1, 17 min on 2 VMs)")
     t0 = time.perf_counter()
     codes = random_dna(args.text_len, seed=0)
-    table = SuffixTable.create("chr_demo", codes, root=root, is_dna=True)
+    table = db.create_table("chr_demo", codes, is_dna=True)
     dt = time.perf_counter() - t0
     print(f"[ingest] {dt:.1f}s = {args.text_len / dt / 1e6:.2f} Mbase/s "
           f"-> {root}/chr_demo v{table.version}")
 
-    svc = HedgedScanService(table)
+    svc = HedgedScanService(table, database=db)
     # paper workload lengths are 1..100; clamp to the table's pattern cap
     # (run_workload validates max_len up front)
     max_len = min(100, table.max_query_len)
@@ -58,22 +61,35 @@ def main():
     print(f"[hedged   ] max={h['max_ms']:.0f}ms p99={h['p99_ms']:.1f}ms "
           f"(single-read max was {s['max_ms']:.0f}ms)")
     # Beyond-paper: match enumeration — the paper only reports the first
-    # match row; the table's locate() gathers the top-k smallest positions
+    # match row; a typed locate Query gathers the top-k smallest positions
     probe = decode_dna(codes[1000:1008])
-    out = table.scan([probe], top_k=8)
-    hits = [int(x) for x in out.positions[0] if x >= 0]
+    out = db.query(Query.locate("chr_demo", [probe], top_k=8))
+    hits = [int(x) for x in out.value[0] if x >= 0]
     print(f"[locate   ] {probe!r}: count={int(out.count[0])} "
           f"positions={hits} (planted at 1000)")
     assert 1000 in hits or int(out.count[0]) > 8
+
+    # Beyond-paper: paged streaming (the ReadRows analogue) — a huge
+    # enumeration comes back in bounded pages; a serialized cursor resumes
+    # mid-stream, even across the compaction below
+    short = decode_dna(codes[1000:1003])
+    sess = db.read_rows("chr_demo", short, page_size=100)
+    first = sess.next_page()
+    cursor = first.cursor                      # plain JSON, process-portable
+    rest = sum(len(p.positions) for p in db.resume_read(cursor).pages())
+    want = int(db.query(Query.count("chr_demo", [short])).value[0])
+    assert len(first.positions) + rest == want
+    print(f"[stream   ] {short!r}: {want} positions = "
+          f"{len(first.positions)} (page 1) + {rest} (resumed from cursor)")
 
     # Beyond-paper: the write path.  Accumulo tables are mutable; so is
     # ours — appends land in the memtable and reads merge exact counts,
     # including matches straddling the old end-of-text.
     tail = decode_dna(codes[-4:])
     straddle = tail + "GATTACA"          # crosses the base/append boundary
-    before = int(table.count([straddle])[0])
+    before = int(db.query(Query.count("chr_demo", [straddle])).value[0])
     table.append("GATTACA" + decode_dna(random_dna(500, seed=7)))
-    after = int(table.count([straddle])[0])
+    after = int(db.query(Query.count("chr_demo", [straddle])).value[0])
     assert after == before + 1, (before, after)
     print(f"[append   ] {straddle!r}: count {before} -> {after} "
           f"(memtable merged read)")
@@ -82,6 +98,7 @@ def main():
     assert int(reopened.count([straddle])[0]) == after
     print(f"[compact  ] v{reopened.version}, {len(reopened)} bases; "
           f"re-opened from disk with identical counts")
+    db.close()
 
 
 if __name__ == "__main__":

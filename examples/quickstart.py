@@ -1,15 +1,16 @@
-"""Quickstart: the paper's pipeline in 30 lines, via the table API.
+"""Quickstart: the paper's pipeline in 40 lines, via the client frontend.
 
-Builds a suffix-array table over a DNA string (``repro.api.SuffixTable``
-is the single public entry point — construction, scans, appends), runs
-pattern scans (paper §V), and shows the paper's own MISSISSIPPI worked
+Builds a suffix-array table over a DNA string, routes typed ``Query``
+requests through a ``repro.api.Database`` handle (the Bigtable-style
+client: count / contains / locate / scan), streams a big enumeration in
+pages (``ReadSession``), and shows the paper's own MISSISSIPPI worked
 example (§III) on the low-level store.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.api import SuffixTable
+from repro.api import Database, Query, SuffixTable
 from repro.core import codec
 from repro.core.tablet import build_tablet_store
 
@@ -22,17 +23,25 @@ print("ordered suffixes (paper §III):")
 for i in sa:
     print("  ", text[i:])
 
-# --- DNA scans (paper §IV-V) through the table facade -----------------------
+# --- DNA scans (paper §IV-V) through the typed client ------------------------
 dna = codec.random_dna(100_000, seed=0)
-table = SuffixTable.from_codes(dna, is_dna=True)   # in-memory table
+with Database.in_memory() as db:                     # the client handle
+    table = db.attach("dna", SuffixTable.from_codes(dna, is_dna=True))
 
-patterns = ["ACGT", "TTTTTTTTTTTTTTTT", "GATTACA"]
-out = table.scan(patterns, top_k=3)
-for p, found, count, pos, row in zip(patterns, out.found, out.count,
-                                     out.first_pos, out.positions):
-    print(f"pattern {p!r}: found={bool(found)} count={int(count)} "
-          f"first_pos={int(pos)} top3={[int(x) for x in row if x >= 0]}")
+    patterns = ["ACGT", "TTTTTTTTTTTTTTTT", "GATTACA"]
+    res = db.query(Query.scan("dna", patterns, top_k=3))
+    for p, found, count, pos, row in zip(patterns, res.found, res.count,
+                                         res.first_pos, res.positions):
+        print(f"pattern {p!r}: found={bool(found)} count={int(count)} "
+              f"first_pos={int(pos)} top3={[int(x) for x in row if x >= 0]}")
 
-# --- the write path: append, merged exact read ------------------------------
-table.append("GATTACAGATTACA")
-print(f"after append: count('GATTACA') = {int(table.count(['GATTACA'])[0])}")
+    # --- paged streaming (the ReadRows analogue) -----------------------------
+    pages = list(db.read_rows("dna", "GATTACA", page_size=4).pages())
+    total = sum(len(pg.positions) for pg in pages)
+    print(f"streamed {total} 'GATTACA' positions in {len(pages)} pages of <=4"
+          f" (cursor resumes across appends and compactions)")
+
+    # --- the write path: append, merged exact read ---------------------------
+    table.append("GATTACAGATTACA")
+    after = int(db.query(Query.count("dna", ["GATTACA"])).value[0])
+    print(f"after append: count('GATTACA') = {after}")

@@ -1,9 +1,12 @@
-"""Serving driver: batched scan requests against a ``repro.api.SuffixTable``
-— the paper's §V service shape, runnable end-to-end.  All scans go through
-the table's merged read path on top of the scan planner (repro.core.planner):
-broadcast/routed selection, sentinel retry, memtable merge, and top-k match
-enumeration; the run ends with an append + compact (the write path).
-Pass ``--root DIR`` to persist and re-open the table across runs.
+"""Serving driver: batched scan requests through the typed client frontend
+— the paper's §V service shape, runnable end-to-end.  Every batch is a
+``repro.api.Query`` routed by table name through a ``Database`` handle:
+the shared ``QueryScheduler`` coalesces concurrent callers (here with a
+2 ms micro-batch window) into bucket-padded planner invocations with
+broadcast/routed selection, sentinel retry, and LSM-tier merge; the run
+demos multi-table serving, paged ``ReadSession`` streaming, and ends
+with an append + compact (the write path).  Pass ``--root DIR`` to
+persist and re-open the tables across runs.
 
     PYTHONPATH=src python examples/serve_queries.py
 """
@@ -11,4 +14,4 @@ from repro.launch.serve import main as serve_main
 
 if __name__ == "__main__":
     serve_main(["--text-len", "200000", "--queries", "5000",
-                "--batch", "256"])
+                "--batch", "256", "--coalesce-window", "2.0"])

@@ -1,14 +1,20 @@
 """repro.api — the table-level public API of the suffix-array store.
 
-``SuffixTable`` (create/open/scan/append/compact) is the single entry
-point for building, persisting, and querying suffix-array tables;
-``Catalog`` manages multiple named tables in one root directory.
-See docs/table_api.md.
+Storage side: ``SuffixTable`` (create/open/scan/append/compact) builds,
+persists, and queries suffix-array tables; ``Catalog`` manages multiple
+named tables in one root directory.  Client side (the Bigtable-style
+frontend, docs/client_api.md): ``Database`` routes typed ``Query``
+requests by table name, coalesces concurrent callers through a
+``QueryScheduler``, and streams huge enumerations in pages via
+``ReadSession``.  See docs/table_api.md and docs/client_api.md.
 """
 from repro.api.catalog import Catalog
+from repro.api.client import Database, Page, Query, QueryFuture, \
+    QueryResult, QueryScheduler, ReadSession
 from repro.api.memtable import Memtable
 from repro.api.runs import Run
 from repro.api.table import SuffixTable, default_root, open_table
 
-__all__ = ["Catalog", "Memtable", "Run", "SuffixTable", "default_root",
-           "open_table"]
+__all__ = ["Catalog", "Database", "Memtable", "Page", "Query",
+           "QueryFuture", "QueryResult", "QueryScheduler", "ReadSession",
+           "Run", "SuffixTable", "default_root", "open_table"]

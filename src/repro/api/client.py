@@ -1,0 +1,732 @@
+"""``repro.api.client`` — the Bigtable-style client frontend.
+
+Bigtable separates the storage layer from the client read API: callers
+hold a client handle, describe reads as typed request objects with
+row-set restrictions, and stream large results in pages (``ReadRows``).
+The storage side of this repo (``SuffixTable`` + the LSM tier) grew
+first; this module is the missing frontend:
+
+* :class:`Database` — a handle over one :class:`~repro.api.Catalog`
+  root.  It routes typed queries by table name, lazily opens and caches
+  tables, owns the :class:`QueryScheduler`, and is the only object a
+  serving caller needs;
+* :class:`Query` / :class:`QueryResult` — the typed request/response
+  pair.  ``kind`` is one of ``count`` / ``contains`` / ``locate`` /
+  ``scan``; patterns are strings or raw encoded code rows; ``top_k``,
+  ``max_len`` and a per-query deadline ride along;
+* :class:`QueryScheduler` — cross-caller micro-batch coalescing: N
+  callers each submitting one pattern inside the coalesce window cost
+  ONE bucket-padded jitted planner invocation, not N.  This is what the
+  paper's Table IV (50 concurrent users) is begging for: sustained
+  queries/sec is set by dispatches, not by per-query compare work;
+* :class:`ReadSession` — the ``ReadRows`` analogue: a huge ``locate``
+  enumeration streams back in bounded pages with a resumable
+  continuation cursor (positions are global text offsets, so cursors
+  survive minor and major compactions).
+
+Semantics: every path funnels into ``SuffixTable.scan`` /
+``scan_batch``, so coalesced results are bit-identical to per-call
+results — ``benchmarks/client_bench.py`` asserts this while measuring
+the queries/sec win.  See docs/client_api.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from typing import Iterator, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.api.catalog import Catalog
+from repro.api.table import SuffixTable
+from repro.core.planner import ScanOutcome
+
+QUERY_KINDS = ("count", "contains", "locate", "scan")
+
+
+# ---------------------------------------------------------------------------
+# typed request / response
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """One typed read request against a named table.
+
+    Exactly one of ``patterns`` (strings, encoded by the table) or
+    ``codes`` + ``lens`` (a pre-encoded batch in the table's store
+    encoding: packed uint32 DNA words or int32 code rows) must be given.
+
+    ``kind`` picks the payload of :attr:`QueryResult.value`:
+    ``count`` → exact counts, ``contains`` → membership, ``locate`` →
+    the ``top_k`` smallest positions, ``scan`` → the full result.
+    ``max_len`` rejects over-long patterns at construction (the table
+    cap still applies at execution); ``deadline_ms`` bounds how long the
+    query may wait in the scheduler queue before execution starts —
+    an expired query gets an error result, never a silent stale answer.
+    """
+    table: str
+    kind: str = "scan"
+    patterns: Optional[tuple] = None
+    codes: Optional[np.ndarray] = None
+    lens: Optional[np.ndarray] = None
+    top_k: int = 0
+    max_len: Optional[int] = None
+    deadline_ms: Optional[float] = None
+
+    def __post_init__(self):
+        if self.kind not in QUERY_KINDS:
+            raise ValueError(f"kind must be one of {QUERY_KINDS}, "
+                             f"got {self.kind!r}")
+        if (self.patterns is None) == (self.codes is None):
+            raise ValueError("exactly one of patterns= (strings) or "
+                             "codes=+lens= (encoded rows) must be given")
+        if self.patterns is not None:
+            pats = tuple(self.patterns)
+            if not pats:
+                raise ValueError("empty pattern list")
+            if not all(isinstance(p, str) for p in pats):
+                raise TypeError("patterns must be strings; pass encoded "
+                                "batches via codes=/lens=")
+            object.__setattr__(self, "patterns", pats)
+        else:
+            if self.lens is None:
+                raise ValueError("codes= requires lens= (per-row lengths)")
+            codes = np.asarray(self.codes)
+            lens = np.asarray(self.lens)
+            if codes.ndim != 2 or lens.ndim != 1 \
+                    or codes.shape[0] != lens.shape[0]:
+                raise ValueError(
+                    f"codes must be (B, W) with lens (B,); got "
+                    f"{codes.shape} / {lens.shape}")
+            if codes.shape[0] == 0:
+                raise ValueError("empty encoded batch")
+            object.__setattr__(self, "codes", codes)
+            object.__setattr__(self, "lens", lens)
+        if self.max_len is not None:
+            too_long = (max(len(p) for p in self.patterns)
+                        if self.patterns is not None
+                        else int(np.max(self.lens)))
+            if too_long > self.max_len:
+                raise ValueError(f"pattern length {too_long} exceeds this "
+                                 f"query's max_len={self.max_len}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.kind == "locate" and self.top_k == 0:
+            object.__setattr__(self, "top_k", 8)
+
+    @property
+    def num_patterns(self) -> int:
+        return (len(self.patterns) if self.patterns is not None
+                else int(self.codes.shape[0]))
+
+    # -- convenience constructors -------------------------------------------
+    @classmethod
+    def count(cls, table: str, patterns: Sequence[str], **kw) -> "Query":
+        return cls(table=table, kind="count", patterns=tuple(patterns), **kw)
+
+    @classmethod
+    def contains(cls, table: str, patterns: Sequence[str], **kw) -> "Query":
+        return cls(table=table, kind="contains", patterns=tuple(patterns),
+                   **kw)
+
+    @classmethod
+    def locate(cls, table: str, patterns: Sequence[str], top_k: int = 8,
+               **kw) -> "Query":
+        return cls(table=table, kind="locate", patterns=tuple(patterns),
+                   top_k=top_k, **kw)
+
+    @classmethod
+    def scan(cls, table: str, patterns: Sequence[str], top_k: int = 0,
+             **kw) -> "Query":
+        return cls(table=table, kind="scan", patterns=tuple(patterns),
+                   top_k=top_k, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """Typed response: always exact, merged over every LSM tier.
+
+    ``positions`` rows follow the table's text-order semantics (the
+    ``top_k`` smallest occurrence positions, ascending, −1-padded).
+    ``batch_size`` is the number of patterns in the coalesced batch this
+    query actually rode in (== ``num_patterns`` for an uncoalesced
+    call); ``wait_ms`` is the time it spent queued before execution.
+    A deadline expiry or execution failure sets ``error`` (arrays are
+    then empty) — check :attr:`ok` or use :attr:`value`, which raises.
+    """
+    kind: str
+    found: np.ndarray                      # (B,)  bool
+    count: np.ndarray                      # (B,)  int64
+    first_pos: np.ndarray                  # (B,)  int64
+    positions: Optional[np.ndarray]        # (B, top_k) int64 | None
+    batch_size: int = 0
+    wait_ms: float = 0.0
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+    @property
+    def value(self):
+        """The kind-appropriate payload; raises on an error result."""
+        if self.error is not None:
+            raise RuntimeError(f"query failed: {self.error}")
+        if self.kind == "count":
+            return self.count
+        if self.kind == "contains":
+            return self.found
+        if self.kind == "locate":
+            return self.positions
+        return self
+
+
+def _error_result(query: Query, message: str,
+                  wait_ms: float = 0.0) -> QueryResult:
+    z = np.zeros((0,), np.int64)
+    return QueryResult(kind=query.kind, found=z.astype(bool), count=z,
+                       first_pos=z, positions=None, batch_size=0,
+                       wait_ms=wait_ms, error=message)
+
+
+class QueryFuture:
+    """Handle for a submitted query; ``result()`` blocks until set."""
+
+    __slots__ = ("_event", "_result")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._result: Optional[QueryResult] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> QueryResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError("query result not ready")
+        return self._result
+
+    def _set(self, result: QueryResult) -> None:
+        self._result = result
+        self._event.set()
+
+
+# ---------------------------------------------------------------------------
+# the coalescing scheduler
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SchedulerStats:
+    """Counters for the coalescing frontend (``Database.stats()``)."""
+    submitted: int = 0            # queries accepted (submit + inline)
+    executed: int = 0             # queries that ran to a result
+    batches: int = 0              # group executions (device dispatches)
+    coalesced_queries: int = 0    # queries that shared a batch with others
+    max_batch_patterns: int = 0   # largest coalesced pattern batch seen
+    deadline_expired: int = 0
+    errors: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Pending:
+    query: Query
+    future: QueryFuture
+    t_submit: float
+
+
+class QueryScheduler:
+    """Coalesces concurrent queries from many callers and tables.
+
+    The first query to arrive opens a coalesce window of ``window_ms``;
+    everything submitted before it closes (or before ``max_batch``
+    queries accumulate) is drained as one wave, grouped by (table,
+    encoding), and each group executes as a SINGLE bucket-padded jitted
+    planner invocation through ``SuffixTable.scan`` / ``scan_batch``.
+    Queries whose ``deadline_ms`` expired while queued get an error
+    result instead of running — and the window never waits past the
+    earliest live deadline.
+
+    ``window_ms=0`` still coalesces whatever is queued at drain time
+    (submissions racing the drain), it just never waits for more.  The
+    worker thread starts lazily on the first :meth:`submit` and exits on
+    :meth:`close` after draining the queue.
+    """
+
+    def __init__(self, resolve_table, *, window_ms: float = 2.0,
+                 max_batch: int = 1024):
+        if window_ms < 0 or max_batch < 1:
+            raise ValueError(f"need window_ms >= 0 and max_batch >= 1, got "
+                             f"window_ms={window_ms} max_batch={max_batch}")
+        self._resolve = resolve_table          # name -> SuffixTable
+        self.window_ms = float(window_ms)
+        self.max_batch = int(max_batch)
+        self.stats = SchedulerStats()
+        self._cv = threading.Condition()
+        # one lock PER TABLE OBJECT serializes that table's scans and
+        # client-side writes: the worker thread draining windowed waves
+        # and inline execute_now() callers would otherwise scan the same
+        # table (and its caches/stats) concurrently, and a write landing
+        # mid-scan would tear the multi-tier view.  Keyed per table so a
+        # slow write/compaction on one table never stalls serving of the
+        # others.  Coalescing is the concurrency story; dispatches to
+        # any single table are serial.
+        self._table_locks: dict[int, threading.Lock] = {}
+        self._pending: list[_Pending] = []
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+
+    # -- async path ----------------------------------------------------------
+    def submit(self, query: Query) -> QueryFuture:
+        """Enqueue for the current coalesce window; returns a future."""
+        fut = QueryFuture()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            self._pending.append(_Pending(query, fut, time.perf_counter()))
+            self.stats.submitted += 1
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._loop, name="query-scheduler", daemon=True)
+                self._thread.start()
+            self._cv.notify_all()
+        return fut
+
+    def _deadline_of(self, wave_open: float) -> float:
+        """Absolute drain time: window close, capped by the earliest
+        per-query deadline among pending queries."""
+        t = wave_open + self.window_ms / 1e3
+        for p in self._pending:
+            if p.query.deadline_ms is not None:
+                t = min(t, p.t_submit + p.query.deadline_ms / 1e3)
+        return t
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if not self._pending and self._closed:
+                    return
+                wave_open = self._pending[0].t_submit
+                while (not self._closed
+                       and len(self._pending) < self.max_batch):
+                    now = time.perf_counter()
+                    left = self._deadline_of(wave_open) - now
+                    if left <= 0:
+                        break
+                    self._cv.wait(timeout=left)
+                wave = self._pending[:self.max_batch]
+                del self._pending[:len(wave)]
+            self._execute(wave)
+
+    def _lock_for(self, table) -> threading.Lock:
+        with self._cv:
+            lock = self._table_locks.get(id(table))
+            if lock is None:
+                lock = self._table_locks[id(table)] = threading.Lock()
+            return lock
+
+    def run_exclusive(self, table, fn):
+        """Run ``fn()`` while no query batch is executing against
+        ``table`` (the object, not the name — aliased registrations
+        share one lock) — the hook client-side writes and paged reads
+        use so a mutation never lands mid-scan (a seal between the base
+        pass and the delta fan-out would double-count the sealed rows)."""
+        with self._lock_for(table):
+            return fn()
+
+    def close(self, timeout: float = 10.0) -> None:
+        """Stop accepting queries, drain the queue, join the worker."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+            thread = self._thread
+        if thread is not None:
+            thread.join(timeout)
+
+    # -- sync path (inline coalescing, no window wait) -----------------------
+    def execute_now(self, queries: Sequence[Query]) -> list[QueryResult]:
+        """Run ``queries`` as one coalesced wave on the calling thread —
+        the inline path ``Database.query``/``query_many`` use.  Grouping,
+        bucketing, and results are identical to the windowed path."""
+        now = time.perf_counter()
+        wave = [_Pending(q, QueryFuture(), now) for q in queries]
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            self.stats.submitted += len(wave)
+        self._execute(wave)
+        return [p.future.result(timeout=0) for p in wave]
+
+    # -- execution core ------------------------------------------------------
+    def _execute(self, wave: list[_Pending]) -> None:
+        groups: dict[tuple, list[_Pending]] = {}
+        for p in wave:
+            if p.query.patterns is not None:
+                key = (p.query.table, "str")
+            else:                     # raw rows coalesce only on equal width
+                key = (p.query.table, "raw", p.query.codes.shape[1],
+                       p.query.codes.dtype.str)
+            groups.setdefault(key, []).append(p)
+        for key, plist in groups.items():
+            self._execute_group(key, plist)
+
+    def _fail(self, plist: list[_Pending], msg: str, now: float) -> None:
+        with self._cv:
+            self.stats.errors += len(plist)
+        for p in plist:
+            p.future._set(_error_result(
+                p.query, msg, wait_ms=(now - p.t_submit) * 1e3))
+
+    def _execute_group(self, key: tuple, plist: list[_Pending]) -> None:
+        try:
+            table = self._resolve(plist[0].query.table)
+        except Exception as e:  # noqa: BLE001 — futures must never hang
+            self._fail(plist, f"{type(e).__name__}: {e}",
+                       time.perf_counter())
+            return
+        with self._lock_for(table):
+            # deadlines are judged HERE, lock in hand: time queued behind
+            # earlier groups or a long client-side write counts against
+            # the budget, so an expired query is reported expired instead
+            # of executing late over text it never agreed to wait for
+            now = time.perf_counter()
+            live: list[_Pending] = []
+            for p in plist:
+                dl = p.query.deadline_ms
+                if dl is not None and (now - p.t_submit) * 1e3 > dl:
+                    with self._cv:
+                        self.stats.deadline_expired += 1
+                    p.future._set(_error_result(
+                        p.query,
+                        f"deadline exceeded: waited "
+                        f"{(now - p.t_submit) * 1e3:.2f}ms of {dl}ms budget",
+                        wait_ms=(now - p.t_submit) * 1e3))
+                else:
+                    live.append(p)
+            if not live:
+                return
+            try:
+                top_k = max(p.query.top_k for p in live)
+                spans, n = [], 0
+                for p in live:
+                    spans.append((n, n + p.query.num_patterns))
+                    n += p.query.num_patterns
+                if key[1] == "str":
+                    pats: list[str] = []
+                    for p in live:
+                        pats.extend(p.query.patterns)
+                    out = table.scan(pats, top_k=top_k)
+                else:
+                    codes = np.concatenate([p.query.codes for p in live])
+                    lens = np.concatenate(
+                        [np.asarray(p.query.lens) for p in live])
+                    out = table.scan_batch(codes, lens, top_k=top_k)
+            except Exception as e:  # noqa: BLE001
+                self._fail(live, f"{type(e).__name__}: {e}", now)
+                return
+        with self._cv:
+            self.stats.batches += 1
+            self.stats.executed += len(live)
+            if len(live) > 1:
+                self.stats.coalesced_queries += len(live)
+            self.stats.max_batch_patterns = max(
+                self.stats.max_batch_patterns, n)
+        for p, (lo, hi) in zip(live, spans):
+            p.future._set(self._slice(p.query, out, lo, hi, n,
+                                      (now - p.t_submit) * 1e3))
+
+    @staticmethod
+    def _slice(query: Query, out: ScanOutcome, lo: int, hi: int,
+               batch_size: int, wait_ms: float) -> QueryResult:
+        """Carve one query's rows out of the group ScanOutcome.  The
+        group ran with the max top_k, and positions are ascending-
+        complete, so slicing ``[:top_k]`` is bit-identical to running
+        the query alone."""
+        positions = None
+        if query.top_k > 0 and out.positions is not None:
+            positions = np.asarray(out.positions[lo:hi, :query.top_k])
+        return QueryResult(
+            kind=query.kind,
+            found=np.asarray(out.found[lo:hi]),
+            count=np.asarray(out.count[lo:hi]),
+            first_pos=np.asarray(out.first_pos[lo:hi]),
+            positions=positions,
+            batch_size=batch_size, wait_ms=wait_ms)
+
+
+# ---------------------------------------------------------------------------
+# paged result streaming (the ReadRows analogue)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Page:
+    """One bounded chunk of a streamed enumeration."""
+    positions: np.ndarray        # ascending global offsets, <= page_size
+    cursor: str                  # resume token for the NEXT page
+    is_last: bool
+
+
+class ReadSession:
+    """Streams every occurrence position of one pattern in bounded pages.
+
+    The cursor after each page is the last position returned; the next
+    page holds the smallest positions strictly greater than it.  Because
+    positions are global text offsets — stable across minor and major
+    compactions — a serialized cursor (:attr:`cursor`, a JSON token)
+    resumes correctly in another process, after an ``append`` or a
+    compaction, via :meth:`Database.resume_read`.  Writes landing behind
+    the cursor are (by design) not re-surfaced; writes ahead of it show
+    up in later pages.
+    """
+
+    def __init__(self, database: "Database", table: str, pattern: str, *,
+                 page_size: int = 256, start_after: int = -1):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.database = database
+        self.table_name = str(table)
+        self.pattern = str(pattern)
+        self.page_size = int(page_size)
+        self._after = int(start_after)
+        self._exhausted = False
+        # one enumeration per (table write_generation), sliced per page —
+        # a stream of P pages costs one scan, not P scans of everything
+        self._enum: Optional[np.ndarray] = None
+        self._enum_gen: Optional[int] = None
+
+    @property
+    def cursor(self) -> str:
+        """Serializable continuation token (``Database.resume_read``)."""
+        return json.dumps({"v": 1, "table": self.table_name,
+                           "pattern": self.pattern,
+                           "after": self._after,
+                           "page_size": self.page_size})
+
+    @classmethod
+    def from_cursor(cls, database: "Database",
+                    cursor: Union[str, dict]) -> "ReadSession":
+        tok = json.loads(cursor) if isinstance(cursor, str) else dict(cursor)
+        if tok.get("v") != 1:
+            raise ValueError(f"unknown cursor version {tok.get('v')!r}")
+        return cls(database, tok["table"], tok["pattern"],
+                   page_size=int(tok["page_size"]),
+                   start_after=int(tok["after"]))
+
+    def next_page(self) -> Optional[Page]:
+        """The next bounded chunk, or ``None`` once exhausted.  The final
+        chunk (possibly empty) has ``is_last=True``; a later resume from
+        its cursor sees only rows appended past it since."""
+        if self._exhausted:
+            return None
+        table = self.database.table(self.table_name)
+
+        def _refresh():
+            gen = table.write_generation
+            if self._enum is None or self._enum_gen != gen:
+                self._enum = table.locate_range(self.pattern, after=-1,
+                                                limit=None)
+                self._enum_gen = gen
+
+        # under the table's execution lock: a write landing mid-
+        # enumeration would tear the base/delta view like a mid-scan write
+        self.database.scheduler.run_exclusive(table, _refresh)
+        start = int(np.searchsorted(self._enum, self._after, side="right"))
+        got = self._enum[start:start + self.page_size]
+        more = self._enum.size > start + self.page_size
+        if got.size:
+            self._after = int(got[-1])
+        self._exhausted = not more
+        return Page(positions=got, cursor=self.cursor, is_last=not more)
+
+    def pages(self) -> Iterator[Page]:
+        while True:
+            page = self.next_page()
+            if page is None:
+                return
+            yield page
+
+    def positions(self) -> Iterator[int]:
+        """Every remaining position, one page at a time."""
+        for page in self.pages():
+            yield from (int(x) for x in page.positions)
+
+    def __iter__(self) -> Iterator[Page]:
+        return self.pages()
+
+
+# ---------------------------------------------------------------------------
+# the database handle
+# ---------------------------------------------------------------------------
+class Database:
+    """A client handle over one catalog root — the serving entry point.
+
+    ``Database(root)`` opens (or creates) a :class:`Catalog` directory
+    and routes queries by table name, opening tables lazily and caching
+    the handles; ``Database.in_memory()`` (or ``root=None``) skips the
+    catalog entirely and serves only :meth:`attach`-ed in-memory tables
+    (persistent roots can attach extra in-memory tables too).  One
+    :class:`QueryScheduler` is shared by every table, so concurrent
+    callers coalesce ACROSS tables into per-table batches.
+
+    The three ways to read::
+
+        db.query(q)            # inline: coalesces only q's own patterns
+        db.query_many(qs)      # inline: coalesces the listed queries
+        db.submit(q).result()  # windowed: coalesces with OTHER callers
+
+    plus :meth:`read_rows` for paged streaming.  ``close()`` (or a
+    ``with`` block) drains the scheduler.
+    """
+
+    def __init__(self, root: Optional[str] = None, *,
+                 coalesce_window_ms: float = 2.0, max_batch: int = 1024,
+                 **open_kw):
+        self.catalog = Catalog(root) if root is not None else None
+        self._open_kw = dict(open_kw)
+        self._tables: dict[str, SuffixTable] = {}
+        self._open_lock = threading.Lock()
+        self.scheduler = QueryScheduler(
+            self.table, window_ms=coalesce_window_ms, max_batch=max_batch)
+
+    @classmethod
+    def in_memory(cls, **kw) -> "Database":
+        """A rootless database: serves attached tables only."""
+        return cls(None, **kw)
+
+    @property
+    def root(self) -> Optional[str]:
+        return self.catalog.root if self.catalog is not None else None
+
+    # -- table routing -------------------------------------------------------
+    def table(self, name: str) -> SuffixTable:
+        """The named table — attached, cached, or lazily opened."""
+        t = self._tables.get(name)
+        if t is None:
+            if self.catalog is None:
+                raise KeyError(
+                    f"no table {name!r} attached to this in-memory "
+                    f"database (attach() it, or open a Database(root))")
+            with self._open_lock:         # concurrent callers open once
+                t = self._tables.get(name)
+                if t is None:
+                    t = self.catalog.open_table(name, **self._open_kw)
+                    self._tables[name] = t
+        return t
+
+    def attach(self, name: str, table: SuffixTable) -> SuffixTable:
+        """Register an in-memory table under ``name`` for routing."""
+        if name in self._tables:
+            raise ValueError(f"table {name!r} is already attached")
+        self._tables[name] = table
+        return table
+
+    def ensure_attached(self, table: SuffixTable,
+                        name: Optional[str] = None) -> str:
+        """Route an already-built table through this handle and return
+        the name to put in ``Query.table``.  Reuses an existing
+        registration of the same object; picks a unique private name
+        when the natural name is taken by a DIFFERENT table (attached or
+        on disk).  The serving engine uses this to ride a shared handle."""
+        if name is None:
+            for reg, t in self._tables.items():
+                if t is table:
+                    return reg
+        name = name or table.name or "_served"
+        if self._tables.get(name) is table:
+            return name
+        if (name not in self._tables
+                and not (self.catalog is not None and name in self.catalog)):
+            self._tables[name] = table
+            return name
+        alt = f"_{name}_{id(table):x}"
+        self._tables[alt] = table
+        return alt
+
+    def create_table(self, name: str, codes, **kw) -> SuffixTable:
+        """Create + persist a table in this root and route to it."""
+        if self.catalog is None:
+            raise RuntimeError("in-memory database: attach() a table built "
+                               "with SuffixTable.from_codes instead")
+        t = self.catalog.create_table(name, codes, **kw)
+        self._tables[name] = t
+        return t
+
+    def drop_table(self, name: str, *, missing_ok: bool = False) -> None:
+        if self.catalog is None:
+            if self._tables.pop(name, None) is None and not missing_ok:
+                raise KeyError(f"no table {name!r} attached to this "
+                               f"in-memory database")
+            return
+        self.catalog.drop_table(name, missing_ok=missing_ok)
+        self._tables.pop(name, None)
+
+    def list_tables(self) -> list[str]:
+        names = set(self._tables)
+        if self.catalog is not None:
+            names.update(self.catalog.list_tables())
+        return sorted(names)
+
+    def __contains__(self, name: str) -> bool:
+        return (name in self._tables
+                or (self.catalog is not None and name in self.catalog))
+
+    # -- typed reads ---------------------------------------------------------
+    def query(self, query: Query) -> QueryResult:
+        """Execute one query inline (no window wait)."""
+        return self.scheduler.execute_now([query])[0]
+
+    def query_many(self, queries: Sequence[Query]) -> list[QueryResult]:
+        """Execute a wave of queries inline, coalesced per table."""
+        return self.scheduler.execute_now(list(queries))
+
+    def submit(self, query: Query) -> QueryFuture:
+        """Enqueue into the coalesce window shared with other callers."""
+        return self.scheduler.submit(query)
+
+    # -- writes through the client -------------------------------------------
+    def append(self, table: str, codes) -> int:
+        """Append through the client: the write is serialized against
+        in-flight query batches, so concurrent readers on this handle
+        never observe a torn multi-tier view (mutating a table directly
+        while other threads read through the client is not
+        synchronized).  Triggers the table's automatic minor/major
+        compactions as usual; returns the memtable size."""
+        t = self.table(table)
+        return self.scheduler.run_exclusive(t, lambda: t.append(codes))
+
+    def compact(self, table: str) -> int:
+        """Major-compact through the client (serialized like
+        :meth:`append`, against this table's readers only); returns the
+        new version."""
+        t = self.table(table)
+        return self.scheduler.run_exclusive(t, t.compact)
+
+    def read_rows(self, table: str, pattern: str, *, page_size: int = 256,
+                  start_after: int = -1) -> ReadSession:
+        """Stream every occurrence position of ``pattern`` in pages."""
+        return ReadSession(self, table, pattern, page_size=page_size,
+                           start_after=start_after)
+
+    def resume_read(self, cursor: Union[str, dict]) -> ReadSession:
+        """Rebuild a :class:`ReadSession` from a serialized cursor."""
+        return ReadSession.from_cursor(self, cursor)
+
+    # -- lifecycle / observability -------------------------------------------
+    def stats(self) -> dict:
+        """``{"scheduler": ..., "tables": {name: table.stats()}}`` for
+        every table this handle has touched (schema: docs/client_api.md)."""
+        return {"scheduler": self.scheduler.stats.as_dict(),
+                "tables": {name: t.stats()
+                           for name, t in sorted(self._tables.items())}}
+
+    def close(self) -> None:
+        self.scheduler.close()
+
+    def __enter__(self) -> "Database":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

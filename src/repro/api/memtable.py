@@ -112,14 +112,20 @@ class Memtable:
             self._sa_host = np.asarray(self._store.sa)
         return self._store
 
-    def match_positions(self, patt, plen) -> list[np.ndarray]:
+    def match_positions(self, patt, plen,
+                        n_real: Optional[int] = None) -> list[np.ndarray]:
         """Global start positions, ascending, of the occurrences only the
         memtable owns; one exact int64 array per query (no top-k cap).
-        ``patt``/``plen`` use the same encoding as the base store."""
+        ``patt``/``plen`` use the same encoding as the base store;
+        ``n_real`` marks trailing shape-bucketing pad rows (skipped on
+        the host side, still run through the jitted query)."""
         B = int(np.asarray(plen).shape[0])
+        if n_real is not None:
+            B = min(B, int(n_real))
         if self.size == 0 or B == 0:
             return [np.zeros((0,), np.int64)] * B
         store = self._ensure_store()
         return positions_in_bounds(store, self._sa_host, patt, plen,
                                    offset=self.n_base - self.overlap,
-                                   lo=self.n_base, hi=self.n_base + self.size)
+                                   lo=self.n_base, hi=self.n_base + self.size,
+                                   n_real=n_real)

@@ -69,14 +69,19 @@ def padded_segment_store(text: np.ndarray, *, is_dna: bool,
 
 
 def positions_in_bounds(store: TabletStore, sa_host: np.ndarray,
-                        patt, plen, *, offset: int, lo: int, hi: int
-                        ) -> list[np.ndarray]:
+                        patt, plen, *, offset: int, lo: int, hi: int,
+                        n_real: Optional[int] = None) -> list[np.ndarray]:
     """Query ``store`` and return, per query, the ascending GLOBAL start
     positions of occurrences with ``lo < g + plen <= hi`` (the tier's
     exact contribution).  ``offset`` maps local store rows to global text
-    positions."""
+    positions.  ``n_real`` marks the trailing rows as the client's
+    shape-bucketing padding: they still ride the jitted query (keeping
+    the compilation bucketed) but skip the host-side gather/filter, and
+    only ``n_real`` lists are returned."""
     plen_np = np.asarray(plen)
     B = int(plen_np.shape[0])
+    if n_real is not None:
+        B = min(B, int(n_real))
     empty = np.zeros((0,), np.int64)
     if B == 0:
         return []
@@ -191,13 +196,17 @@ class Run:
             run._sa_host = np.asarray(run._store.sa)
         return run
 
-    def match_positions(self, patt, plen) -> list[np.ndarray]:
+    def match_positions(self, patt, plen,
+                        n_real: Optional[int] = None) -> list[np.ndarray]:
         """Global start positions, ascending, of exactly the occurrences
         this run owns: ``start < g + plen <= end``."""
         B = int(np.asarray(plen).shape[0])
+        if n_real is not None:
+            B = min(B, int(n_real))
         if self.length == 0 or B == 0:
             return [np.zeros((0,), np.int64)] * B
         store = self._ensure_store()
         return positions_in_bounds(store, self._sa_host, patt, plen,
                                    offset=self.start - self.overlap,
-                                   lo=self.start, hi=self.end)
+                                   lo=self.start, hi=self.end,
+                                   n_real=n_real)

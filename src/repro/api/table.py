@@ -270,16 +270,23 @@ class SuffixTable:
         return np.asarray(build_suffix_array(codes.astype(np.int32)))
 
     def _attach(self, codes: np.ndarray, sa_real: np.ndarray) -> None:
-        """(Re)build the runtime store + planner for the current mesh."""
+        """(Re)build the runtime store for the current mesh.  An existing
+        planner is re-bound IN PLACE (not replaced): captured references
+        — the serving engine holds one — keep serving the post-compaction
+        text, and accumulated planner stats survive."""
         p = 1 if self.mesh is None else int(
             np.prod([self.mesh.shape[a] for a in self.mesh.axis_names]))
         self.store = store_from_arrays(
             codes, sa_real, is_dna=self.is_dna,
             max_query_len=self.max_query_len, num_tablets=p)
-        self.planner = ScanPlanner(
-            self.store, mesh=self.mesh, cache_size=self.cache_size,
-            capacity_factor=self.capacity_factor,
-            routed_min_batch=self.routed_min_batch)
+        planner = getattr(self, "planner", None)
+        if planner is None:
+            self.planner = ScanPlanner(
+                self.store, mesh=self.mesh, cache_size=self.cache_size,
+                capacity_factor=self.capacity_factor,
+                routed_min_batch=self.routed_min_batch)
+        else:
+            planner.rebind(self.store)
 
     # -- introspection -------------------------------------------------------
     def __len__(self) -> int:
@@ -300,12 +307,64 @@ class SuffixTable:
     def is_persistent(self) -> bool:
         return self._manager is not None
 
+    @property
+    def write_generation(self) -> int:
+        """Monotone counter bumped by every write (``append`` /
+        ``minor_compact`` / ``compact``) — the staleness stamp for
+        cached results (``ReadSession`` re-enumerates only when this
+        moves)."""
+        return self._cache.generation
+
     def stats(self) -> dict:
-        return {"name": self.name, "version": self.version,
-                "n_base": self.n_base, "runs": len(self.runs),
+        """Observability snapshot with a STABLE schema (docs/client_api.md
+        documents every key; serve.py prints it):
+
+        * ``name`` / ``version`` / ``is_dna`` / ``max_query_len`` —
+          identity;
+        * ``tiers`` — ``base_rows``, ``run_count``, ``run_rows``,
+          ``memtable_rows`` (the LSM stack, in symbols);
+        * ``cache`` — the table-level string-result cache: ``entries``,
+          ``hits``, ``misses``, ``generation`` (bumped by every write);
+        * ``planner`` — ``PlannerStats.as_dict()``: batches, queries,
+          mode counts, retry counters, and the bucketed-batch slot
+          accounting (``bucketed_batches`` / ``bucketed_queries`` /
+          ``pad_slots``) fed by the client frontend.  (True cross-caller
+          coalescing counters live in ``Database.stats()["scheduler"]``.)
+
+        New keys may be added; existing keys keep their meaning."""
+        return {
+            "name": self.name,
+            "version": self.version,
+            "is_dna": self.is_dna,
+            "max_query_len": self.max_query_len,
+            "tiers": {
+                "base_rows": self.n_base,
+                "run_count": len(self.runs),
                 "run_rows": self.n_logical - self.n_base,
                 "memtable_rows": self.memtable.size,
-                "is_dna": self.is_dna, "planner": self.planner.stats.as_dict()}
+            },
+            "cache": {
+                "entries": len(self._cache),
+                "hits": self._cache.hits,
+                "misses": self._cache.misses,
+                "generation": self._cache.generation,
+            },
+            "planner": self.planner.stats.as_dict(),
+        }
+
+    def _invalidate_caches(self) -> None:
+        """Generation-bump the table AND planner string-result caches —
+        the logical text just changed, so any cached count/top-k from
+        before this write must never be served again (previously the
+        planner's own cache was left stale across table writes)."""
+        self._cache.bump()
+        self.planner.invalidate_cache()
+
+    def clear_cache(self) -> None:
+        """Drop all cached string-scan results (benchmarks use this to
+        time cold reads)."""
+        self._cache.clear()
+        self.planner.clear_cache()
 
     def _reset_memtable(self) -> None:
         """Fresh empty memtable whose overlap window is the tail of the
@@ -327,22 +386,28 @@ class SuffixTable:
         return self.planner._sa()
 
     # -- read path -----------------------------------------------------------
-    def _delta_positions(self, patt, plen) -> list[np.ndarray]:
+    def _delta_positions(self, patt, plen,
+                         n_real: Optional[int] = None) -> list[np.ndarray]:
         """Fan a query batch out over the delta tiers (sealed runs, then
         the memtable) and merge: per query, the ascending global start
         positions of every occurrence the base index cannot see.  Each
         occurrence ends in exactly one tier, so concatenation never
         double-counts; straddles make per-tier ranges overlap, hence the
-        sort."""
+        sort.  ``n_real`` marks trailing shape-bucketing pad rows: they
+        ride the jitted tier queries but skip the host-side merge, and
+        only ``n_real`` lists come back."""
         plen_np = np.asarray(plen)
         B = int(plen_np.shape[0])
+        if n_real is not None:
+            B = min(B, int(n_real))
         empty = np.zeros((0,), np.int64)
         tiers = [r for r in self.runs if r.length]
         if self.memtable.size:
             tiers.append(self.memtable)
         if not tiers or B == 0:
             return [empty] * B
-        per_tier = [t.match_positions(patt, plen) for t in tiers]
+        per_tier = [t.match_positions(patt, plen, n_real=n_real)
+                    for t in tiers]
         out = []
         for i in range(B):
             gs = [p[i] for p in per_tier if p[i].size]
@@ -384,6 +449,69 @@ class SuffixTable:
                            first_rank=base.first_rank,
                            first_pos=jnp.asarray(first_pos))
 
+    def _all_positions(self, base_count, base_rank, extra, i
+                       ) -> tuple[int, np.ndarray, np.ndarray]:
+        """Row ``i`` of a merged scan: (count, base SA slice, delta
+        positions) — the complete occurrence set split by tier."""
+        run = np.zeros((0,), np.int64)
+        cb = int(base_count[i])
+        if cb > 0 and base_rank[i] >= 0:
+            lb = self.store.pad_count + int(base_rank[i])
+            run = self._sa()[lb:lb + cb].astype(np.int64)
+        g = extra[i]
+        return cb + int(g.size), run, g
+
+    def scan_batch(self, patt, plen, top_k: int = 0) -> ScanOutcome:
+        """Merged scan of an encoded batch with **text-order** semantics
+        — the client frontend's batch entry point (no string cache).
+
+        The batch is padded to a power-of-two bucket (row 0 repeated)
+        before the jitted base scan and the delta-tier fan-out, so
+        coalesced batches of varying size reuse O(log B) compilations
+        instead of one per size; pad slots are discarded here and
+        attributed to ``planner.stats.pad_slots`` (slot accounting under
+        ``bucketed_batches``), never to ``queries``.
+        """
+        plen_np = np.asarray(plen)
+        B = int(plen_np.shape[0])
+        if B == 0:
+            return ScanOutcome(
+                found=np.zeros(0, bool), count=np.zeros(0, np.int64),
+                first_pos=np.full(0, -1, np.int64),
+                positions=(np.full((0, top_k), -1, np.int64)
+                           if top_k else None))
+        patt_np = np.asarray(patt)
+        bucket = 1 << (B - 1).bit_length() if B > 1 else 1
+        if bucket != B:
+            reps = bucket - B
+            patt_np = np.concatenate(
+                [patt_np, np.repeat(patt_np[:1], reps, axis=0)])
+            plen_np = np.concatenate(
+                [plen_np, np.repeat(plen_np[:1], reps)])
+        base = self.planner.scan_encoded(jnp.asarray(patt_np),
+                                         jnp.asarray(plen_np), n_real=B)
+        extra = self._delta_positions(patt_np, plen_np, n_real=B)
+        count = np.zeros(B, np.int64)
+        first_pos = np.full(B, -1, np.int64)
+        positions = (np.full((B, top_k), -1, np.int64) if top_k else None)
+        base_count = np.asarray(base.count).astype(np.int64)
+        base_rank = np.asarray(base.first_rank)
+        for i in range(B):
+            count[i], run, g = self._all_positions(base_count, base_rank,
+                                                   extra, i)
+            firsts = ([int(run.min())] if run.size else []) + \
+                ([int(g[0])] if g.size else [])
+            if firsts:
+                first_pos[i] = min(firsts)
+            if top_k:
+                cand = np.concatenate([run, g])
+                if cand.size > top_k:
+                    cand = np.partition(cand, top_k - 1)[:top_k]
+                cand.sort()
+                positions[i, :cand.size] = cand
+        return ScanOutcome(found=count > 0, count=count,
+                           first_pos=first_pos, positions=positions)
+
     def scan(self, patterns: list[str], top_k: int = 0) -> ScanOutcome:
         """String-level merged scan with **text-order** semantics: exact
         ``count``; ``first_pos`` is the smallest occurrence position;
@@ -391,8 +519,9 @@ class SuffixTable:
         occurrence start positions, ascending, −1-padded — the complete
         set whenever ``count <= top_k``.  (The planner's own string API
         instead reports suffix-rank order over the base only.)  Results
-        are LRU-cached; the cache is dropped on :meth:`append` /
-        :meth:`compact`."""
+        are LRU-cached; every write (:meth:`append` /
+        :meth:`minor_compact` / :meth:`compact`) generation-bumps the
+        cache so pre-write results are never served."""
         B = len(patterns)
         count = np.zeros(B, np.int64)
         first_pos = np.full(B, -1, np.int64)
@@ -408,36 +537,46 @@ class SuffixTable:
                 miss_idx.append(i)
         if miss_idx:
             patt, plen = self.planner.encode([patterns[i] for i in miss_idx])
-            base = self.planner.scan_encoded(patt, plen)
-            extra = self._delta_positions(patt, plen)
-            base_count = np.asarray(base.count).astype(np.int64)
-            base_rank = np.asarray(base.first_rank)
-            sa, pad = self._sa(), self.store.pad_count
+            sub = self.scan_batch(patt, plen, top_k=top_k)
             for j, i in enumerate(miss_idx):
-                run = np.zeros((0,), np.int64)
-                cb = int(base_count[j])
-                if cb > 0 and base_rank[j] >= 0:
-                    lb = pad + int(base_rank[j])
-                    run = sa[lb:lb + cb].astype(np.int64)
-                g = extra[j]
-                count[i] = cb + g.size
-                firsts = ([int(run.min())] if run.size else []) + \
-                    ([int(g[0])] if g.size else [])
-                if firsts:
-                    first_pos[i] = min(firsts)
-                row = None
+                count[i] = sub.count[j]
+                first_pos[i] = sub.first_pos[j]
+                row = sub.positions[j] if top_k else None
                 if top_k:
-                    cand = np.concatenate([run, g])
-                    if cand.size > top_k:
-                        cand = np.partition(cand, top_k - 1)[:top_k]
-                    cand.sort()
-                    row = np.full(top_k, -1, np.int64)
-                    row[:cand.size] = cand
                     positions[i] = row
                 self._cache.put(patterns[i], int(count[i]),
                                 int(first_pos[i]), top_k, row)
         return ScanOutcome(found=count > 0, count=count,
                            first_pos=first_pos, positions=positions)
+
+    def locate_range(self, pattern: str, *, after: int = -1,
+                     limit: Optional[int] = 256) -> np.ndarray:
+        """Up to ``limit`` occurrence start positions of ``pattern``
+        STRICTLY greater than ``after``, ascending int64 — the paged-read
+        primitive under :class:`repro.api.client.ReadSession`
+        (``limit=None`` returns the complete enumeration, which the
+        session caches per :attr:`write_generation` so a stream of pages
+        costs ONE scan, not one per page).
+
+        Positions are global text offsets, which are stable identifiers
+        across minor and major compactions: a cursor (= the last position
+        of the previous page) taken before a compaction resumes exactly
+        after it.  The host-side gather is O(count) for the base tier;
+        the returned chunk is what stays bounded."""
+        if limit is not None and limit <= 0:
+            raise ValueError(f"limit must be positive, got {limit}")
+        patt, plen = self.planner.encode([pattern])
+        base = self.planner.scan_encoded(patt, plen, n_real=1)
+        extra = self._delta_positions(patt, plen)
+        _, run, g = self._all_positions(
+            np.asarray(base.count).astype(np.int64),
+            np.asarray(base.first_rank), extra, 0)
+        cand = np.concatenate([run, g]) if g.size else run
+        cand = cand[cand > after]
+        if limit is not None and cand.size > limit:
+            cand = np.partition(cand, limit - 1)[:limit]
+        cand.sort()
+        return cand.astype(np.int64)
 
     def count(self, patterns: list[str]) -> np.ndarray:
         """Exact occurrence counts, (B,) int64."""
@@ -464,7 +603,7 @@ class SuffixTable:
                                 "array for token tables")
             codes = codec.encode_dna(codes)
         self.memtable.append(codes)
-        self._cache.clear()
+        self._invalidate_caches()
         if (self.memtable_limit is not None
                 and self.memtable.size >= self.memtable_limit):
             self.minor_compact()
@@ -483,7 +622,7 @@ class SuffixTable:
             return len(self.runs)
         self.runs.append(Run.from_memtable(self.memtable))
         self._reset_memtable()
-        self._cache.clear()
+        self._invalidate_caches()
         if self.max_runs is not None and len(self.runs) >= self.max_runs:
             self.compact()
         elif self._manager is not None:
@@ -522,10 +661,10 @@ class SuffixTable:
                 combined, self.n_base, np.asarray(self.store.sa)[pad:],
                 is_dna=self.is_dna, max_query_len=self.max_query_len)
         self._codes = combined
-        self._attach(combined, sa_real)
+        self._attach(combined, sa_real)      # rebind bumps the planner cache
         self.runs = []
         self._reset_memtable()
-        self._cache.clear()
+        self._invalidate_caches()
         self.version += 1
         self._persist()
         return self.version

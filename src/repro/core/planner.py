@@ -44,6 +44,7 @@ See ``docs/scan_planner.md`` for the full contract.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from functools import partial
 from typing import Callable, Optional
@@ -81,6 +82,14 @@ class PlannerStats:
     retried_overflow: int = 0     # -1 sentinels re-executed
     retried_saturated: int = 0    # -2 sentinels re-executed
     retried_inexact_rank: int = 0  # found but first_rank < 0 (defensive)
+    # batch-slot accounting for the client's bucket-padded batches: a
+    # batch submitted with n_real carries B - n_real padding slots
+    # (shape bucketing); ``queries`` above counts only the real ones.
+    # (True cross-caller coalescing is counted by SchedulerStats in
+    # repro.api.client — these count slot usage per dispatch.)
+    bucketed_batches: int = 0
+    bucketed_queries: int = 0
+    pad_slots: int = 0
     mode_counts: dict = dataclasses.field(
         default_factory=lambda: {MODE_SINGLE: 0, MODE_BROADCAST: 0,
                                  MODE_ROUTED: 0})
@@ -92,33 +101,54 @@ class PlannerStats:
 
 
 class TopKCache:
-    """LRU over pattern strings, top_k-aware.
+    """LRU over pattern strings, top_k-aware and generation-stamped.
 
-    One entry per pattern holds ``(count, first_pos, k_stored, row)``.
-    An entry cached with ``k_stored`` positions serves ANY request with
-    ``top_k <= k_stored`` by slicing, and any ``top_k`` at all when the
-    cached position set is complete (``count <= k_stored``) — instead of
-    storing duplicate entries per ``(pattern, top_k)`` key.  A request
-    needing more positions than stored is a miss and its result
-    overwrites the entry (never with fewer positions than it had).
-    Shared by :class:`ScanPlanner` and ``repro.api.SuffixTable``.
+    One entry per pattern holds ``(generation, count, first_pos,
+    k_stored, row)``.  An entry cached with ``k_stored`` positions
+    serves ANY request with ``top_k <= k_stored`` by slicing, and any
+    ``top_k`` at all when the cached position set is complete
+    (``count <= k_stored``) — instead of storing duplicate entries per
+    ``(pattern, top_k)`` key.  A request needing more positions than
+    stored is a miss and its result overwrites the entry (never with
+    fewer positions than it had).
+
+    Every entry is stamped with the cache's ``generation`` at put time;
+    :meth:`bump` advances the generation, lazily invalidating every
+    older entry in O(1) — the write path (``append`` /
+    ``minor_compact`` / ``compact``) bumps instead of serving counts
+    from before the logical text changed.  Shared by
+    :class:`ScanPlanner` and ``repro.api.SuffixTable``.
     """
 
     def __init__(self, size: int):
         self.size = int(size)
+        self.generation = 0
+        self.hits = 0
+        self.misses = 0
         self._d: OrderedDict[str, tuple] = OrderedDict()
+        # the client's scheduler worker and inline callers share this
+        # cache across threads; every mutating path is check-then-act on
+        # the OrderedDict, so each method holds the lock
+        self._lock = threading.Lock()
 
     def get(self, pattern: str, top_k: int):
         """(count, first_pos, positions (top_k,) | None) or None on miss."""
         if self.size <= 0:
             return None
-        ent = self._d.get(pattern)
-        if ent is None:
-            return None
-        count, first_pos, k_stored, row = ent
-        if top_k > 0 and k_stored < top_k and count > k_stored:
-            return None            # not enough positions cached
-        self._d.move_to_end(pattern)
+        with self._lock:
+            ent = self._d.get(pattern)
+            if ent is not None and ent[0] != self.generation:
+                del self._d[pattern]         # stamped before the last write
+                ent = None
+            if ent is None:
+                self.misses += 1
+                return None
+            _gen, count, first_pos, k_stored, row = ent
+            if top_k > 0 and k_stored < top_k and count > k_stored:
+                self.misses += 1
+                return None        # not enough positions cached
+            self._d.move_to_end(pattern)
+            self.hits += 1
         if top_k <= 0:
             return count, first_pos, None
         out = np.full(top_k, -1, np.int64)
@@ -131,21 +161,35 @@ class TopKCache:
             k_stored: int, row) -> None:
         if self.size <= 0:
             return
-        old = self._d.get(pattern)
-        if old is not None and old[2] > k_stored:
-            self._d.move_to_end(pattern)     # keep the richer entry
-            return
-        self._d[pattern] = (int(count), int(first_pos), int(k_stored),
-                            None if row is None else np.asarray(row))
-        self._d.move_to_end(pattern)
-        while len(self._d) > self.size:
-            self._d.popitem(last=False)
+        with self._lock:
+            old = self._d.get(pattern)
+            if (old is not None and old[0] == self.generation
+                    and old[3] > k_stored):
+                self._d.move_to_end(pattern)  # keep the richer live entry
+                return
+            self._d[pattern] = (self.generation, int(count), int(first_pos),
+                                int(k_stored),
+                                None if row is None else np.asarray(row))
+            self._d.move_to_end(pattern)
+            while len(self._d) > self.size:
+                self._d.popitem(last=False)
+
+    def bump(self) -> int:
+        """Invalidate every current entry (O(1)): stale entries are
+        dropped lazily on their next lookup.  Returns the new
+        generation — ``repro.api.SuffixTable`` stamps this into its
+        :meth:`~repro.api.SuffixTable.stats` so staleness is observable."""
+        with self._lock:
+            self.generation += 1
+            return self.generation
 
     def clear(self) -> None:
-        self._d.clear()
+        with self._lock:
+            self._d.clear()
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,6 +255,33 @@ class ScanPlanner:
         # executors are built lazily and injectable for tests: each maps
         # (patt, plen) -> MatchResult
         self._executors: dict[str, Callable] = {}
+
+    def rebind(self, store: TabletStore) -> None:
+        """Swap the underlying store in place (major compaction publishes
+        a new base).  Captured planner references — the serving engine
+        holds one — keep serving the NEW text instead of going silently
+        stale: jitted executors are rebuilt lazily against the new store,
+        the host SA copy is dropped, and the string-result cache is
+        generation-bumped.  Accumulated stats survive the rebind."""
+        if self.mesh is not None:
+            p = self.num_tablets
+            if store.n_pad % p != 0:
+                raise ValueError(
+                    f"store.n_pad={store.n_pad} is not divisible by the "
+                    f"mesh's {p} tablets — rebuild the store with "
+                    f"num_tablets={p} (build_tablet_store)")
+        self.store = store
+        self.max_pattern_len = int(store.max_query_len)
+        self._executors.clear()
+        self._sa_host = None
+        self._cache.bump()
+
+    def invalidate_cache(self) -> int:
+        """Generation-bump the string-result cache: every cached
+        count/top-k from before this call becomes unservable.  The table
+        write path calls this on ``append`` / ``minor_compact`` /
+        ``compact`` so no read can observe pre-write results."""
+        return self._cache.bump()
 
     # -- planning -----------------------------------------------------------
     @property
@@ -295,15 +366,25 @@ class ScanPlanner:
 
     # -- encoded-batch API --------------------------------------------------
     def scan_encoded(self, patt, plen, *, mode: Optional[str] = None,
-                     retry: bool = True) -> MatchResult:
+                     retry: bool = True,
+                     n_real: Optional[int] = None) -> MatchResult:
         """Exact scan of an encoded batch (packed uint32 DNA or int32 codes).
 
         Selects the executor via :meth:`plan` (or ``mode`` when forced),
         then re-executes any query whose routed count came back negative
         (-1 overflow / -2 saturated) through the exact path.  With
         ``retry=False`` the raw sentinels are returned (benchmarks only).
+
+        ``n_real`` is the client's batch-slot accounting: the trailing
+        ``B - n_real`` rows are shape-bucketing padding whose results
+        the caller discards.  Stats then attribute only the real queries
+        to ``queries`` (and record the batch under ``bucketed_batches``
+        / ``pad_slots``); execution is unchanged — padding rows still
+        run, which is the point of bucketing.
         """
         B = int(patt.shape[0])
+        if n_real is not None and not 0 <= n_real <= B:
+            raise ValueError(f"n_real={n_real} out of range for batch {B}")
         if B:
             max_plen = int(np.max(np.asarray(plen)))
             if max_plen > self.max_pattern_len:
@@ -320,7 +401,13 @@ class ScanPlanner:
             raise ValueError(
                 f"mode {chosen!r} requires a mesh; this planner has none")
         self.stats.batches += 1
-        self.stats.queries += B
+        if n_real is None:
+            self.stats.queries += B
+        else:
+            self.stats.queries += n_real
+            self.stats.bucketed_batches += 1
+            self.stats.bucketed_queries += n_real
+            self.stats.pad_slots += B - n_real
         self.stats.mode_counts[chosen] += 1
         if B == 0:
             z = jnp.zeros((0,), jnp.int32)

@@ -1,20 +1,29 @@
-"""Serving launcher — the paper's workload end-to-end, through the table API.
+"""Serving launcher — the paper's workload end-to-end, through the client.
 
-Creates (or re-opens) a named ``repro.api.SuffixTable`` over a synthetic
-DNA corpus — distributed construction when >1 device — then serves batched
-random-pattern scans through ``HedgedScanService`` (scan-planner execution
-with sentinel retry, plus the table's merged base+memtable reads) and
-prints the paper's Table III/IV statistics, with and without hedged reads.
-Finishes with the write path: append a planted segment, show the exact
-merged count, seal it into an immutable run (minor compaction), then
-merge-fold into the base (major compaction) and report the bumped version.
-``--memtable-limit`` / ``--max-runs`` make both compactions automatic.
+Opens a ``repro.api.Database`` handle (one catalog root, many named
+tables) and serves batched random-pattern scans through
+``HedgedScanService`` — now a replica/hedging policy riding the typed
+client frontend: every batch is a ``Query`` routed by table name,
+coalesced by the shared ``QueryScheduler``, and executed as one
+bucket-padded jitted planner invocation.  Prints the paper's Table
+III/IV statistics with and without hedged reads, then demonstrates the
+beyond-paper client surface:
+
+* **multi-table serving from one root** — a second table is created (or
+  re-opened) next to the first and queries from simulated concurrent
+  callers to BOTH tables are submitted through the one scheduler;
+  ``--coalesce-window`` is its micro-batch window in ms;
+* **paged result streaming** — a hot pattern's full occurrence list is
+  streamed in bounded ``ReadSession`` pages with a resumable cursor;
+* **the write path** — append, merged-read, minor compaction (seal to a
+  run), major compaction (merge-fold, version bump);
+* the table's documented ``stats()`` schema, printed at the end.
 
     PYTHONPATH=src python -m repro.launch.serve --text-len 200000 \
-        --queries 10000 --batch 512
+        --queries 10000 --batch 512 --coalesce-window 2.0
 
 Pass ``--root DIR`` to persist: the first run creates ``--table`` under
-DIR, later runs ``SuffixTable.open`` it (no rebuild) on any device count.
+DIR, later runs re-open it (no rebuild) on any device count.
 """
 from __future__ import annotations
 
@@ -23,7 +32,7 @@ import time
 
 import jax
 
-from repro.api import Catalog, SuffixTable
+from repro.api import Database, Query, SuffixTable
 from repro.core.codec import decode_dna, random_dna
 from repro.serving import HedgedScanService
 
@@ -38,6 +47,11 @@ def main(argv=None):
     ap.add_argument("--capacity-factor", type=float, default=2.0)
     ap.add_argument("--top-k", type=int, default=5,
                     help="positions per query in the locate demo")
+    ap.add_argument("--coalesce-window", type=float, default=2.0,
+                    help="QueryScheduler micro-batch window in ms "
+                         "(0 disables waiting, not coalescing)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="ReadSession page size in the streaming demo")
     ap.add_argument("--memtable-limit", type=int, default=None,
                     help="seal the memtable into an immutable run (minor "
                          "compaction) once it reaches this many symbols")
@@ -48,17 +62,24 @@ def main(argv=None):
                     help="catalog root dir; omit for an in-memory table")
     ap.add_argument("--table", default="dna_serve",
                     help="table name under --root")
+    ap.add_argument("--aux-table", default="dna_aux",
+                    help="second table for the multi-table demo")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     n_dev = len(jax.devices())
     lsm = {"memtable_limit": args.memtable_limit, "max_runs": args.max_runs}
+    # open_kw reach every table this handle opens from disk — the reopen
+    # path must honor --capacity-factor just like the create path does
+    open_kw = dict(lsm, capacity_factor=args.capacity_factor)
+    db = Database(args.root, coalesce_window_ms=args.coalesce_window,
+                  **(open_kw if args.root is not None else {}))
+
     t0 = time.time()
-    if args.root is not None and args.table in Catalog(args.root):
+    if args.root is not None and args.table in db:
         print(f"[open ] table {args.table!r} from {args.root} "
               f"({n_dev} device(s)) ...", flush=True)
-        table = SuffixTable.open(args.table, root=args.root,
-                                 capacity_factor=args.capacity_factor, **lsm)
+        table = db.table(args.table)
         print(f"[open ] v{table.version}, {len(table)} bases "
               f"({len(table.runs)} run(s)) in {time.time() - t0:.1f}s "
               f"(no rebuild)")
@@ -67,12 +88,12 @@ def main(argv=None):
               f"({n_dev} device(s)) ...", flush=True)
         codes = random_dna(args.text_len, seed=args.seed)
         if args.root is None:
-            table = SuffixTable.from_codes(
+            table = db.attach(args.table, SuffixTable.from_codes(
                 codes, is_dna=True, capacity_factor=args.capacity_factor,
-                **lsm)
+                **lsm))
         else:
-            table = SuffixTable.create(
-                args.table, codes, root=args.root, is_dna=True,
+            table = db.create_table(
+                args.table, codes, is_dna=True,
                 capacity_factor=args.capacity_factor, **lsm)
         dt = time.time() - t0
         print(f"[build] done in {dt:.1f}s "
@@ -83,7 +104,7 @@ def main(argv=None):
     if max_pattern < args.max_pattern:
         print(f"[clamp ] --max-pattern {args.max_pattern} -> {max_pattern} "
               f"(table max_query_len)")
-    svc = HedgedScanService(table, replicas=args.replicas)
+    svc = HedgedScanService(table, replicas=args.replicas, database=db)
     for hedged in (False, True):
         stats = svc.run_workload(args.queries, batch=args.batch,
                                  max_len=max_pattern, hedged=hedged,
@@ -96,19 +117,51 @@ def main(argv=None):
               f"corr(len,t)={stats['corr_len_time']:.3f} "
               f"corr(len,hit)={stats['corr_len_outcome']:.3f}")
 
-    # match enumeration: top-k occurrence positions for a few hot patterns
-    if args.top_k > 0:
-        hot = ["ACGT", "GATTACA", "TTTT"]
-        out = table.scan(hot, top_k=args.top_k)
-        for p, c, row in zip(hot, out.count, out.positions):
-            shown = [int(x) for x in row if x >= 0]
-            print(f"[locate] {p!r}: count={int(c)} first_{args.top_k}={shown}")
+    # multi-table serving from one root: a second table next to the first,
+    # and interleaved queries from simulated concurrent callers to BOTH
+    # submitted through the one scheduler (cross-caller, cross-table
+    # coalescing — each wave costs one dispatch per table, not one per
+    # caller)
+    if args.aux_table in db:
+        aux = db.table(args.aux_table)
+    elif args.root is not None:
+        aux = db.create_table(args.aux_table,
+                              random_dna(args.text_len // 4,
+                                         seed=args.seed + 17), is_dna=True)
+    else:
+        aux = db.attach(args.aux_table, SuffixTable.from_codes(
+            random_dna(args.text_len // 4, seed=args.seed + 17),
+            is_dna=True))
+    hot = ["ACGT", "GATTACA", "TTTT", "CCCCGGGG"]
+    before = db.scheduler.stats.batches
+    futs = [db.submit(Query.count(name, [p]))
+            for p in hot for name in (args.table, args.aux_table)]
+    waves = [f.result(timeout=30.0) for f in futs]
+    s = db.scheduler.stats
+    print(f"[client] {len(futs)} concurrent single-pattern callers over "
+          f"2 tables -> {s.batches - before} dispatch(es) "
+          f"(scheduler: submitted={s.submitted} coalesced="
+          f"{s.coalesced_queries} max_batch={s.max_batch_patterns})")
+    del aux, waves
 
-    print(f"[table ] {table.stats()}")
+    # match enumeration through typed queries + paged streaming
+    if args.top_k > 0:
+        out = db.query(Query.scan(args.table, hot[:3], top_k=args.top_k))
+        for p, c, row in zip(hot[:3], out.count, out.positions):
+            shown = [int(x) for x in row if x >= 0]
+            print(f"[locate] {p!r}: count={int(c)} "
+                  f"first_{args.top_k}={shown}")
+    sess = db.read_rows(args.table, "ACGT", page_size=args.page_size)
+    n_pages = n_pos = 0
+    for page in sess.pages():
+        n_pages += 1
+        n_pos += int(page.positions.size)
+    want = int(db.query(Query.count(args.table, ["ACGT"])).count[0])
+    print(f"[stream] ReadRows('ACGT'): {n_pos} positions in {n_pages} "
+          f"page(s) of <= {args.page_size} (one-shot count {want})")
 
     # the write path: append, merged read, minor compaction (seal to an
-    # immutable run), then major compaction (merge-fold into the base —
-    # rebuilds the planner, so the workload stats above are printed first)
+    # immutable run), then major compaction (merge-fold into the base)
     planted = "GATTACA" * 3
     before = int(table.count([planted])[0])
     table.append(planted + decode_dna(random_dna(993, seed=args.seed + 1)))
@@ -119,6 +172,25 @@ def main(argv=None):
     print(f"[write ] append 1000 bases: count({planted[:10]}...) "
           f"{before} -> {after} (merged read); sealed into run "
           f"#{n_runs} (count still {sealed}); major-compacted to v{v}")
+
+    # the documented stats schema (docs/client_api.md)
+    st = table.stats()
+    print(f"[table ] {st['name'] or args.table} v{st['version']} "
+          f"dna={st['is_dna']} cap={st['max_query_len']}")
+    print(f"[tiers ] base={st['tiers']['base_rows']} "
+          f"runs={st['tiers']['run_count']} "
+          f"run_rows={st['tiers']['run_rows']} "
+          f"memtable={st['tiers']['memtable_rows']}")
+    print(f"[cache ] entries={st['cache']['entries']} "
+          f"hits={st['cache']['hits']} misses={st['cache']['misses']} "
+          f"generation={st['cache']['generation']}")
+    pl = st["planner"]
+    print(f"[plan  ] batches={pl['batches']} queries={pl['queries']} "
+          f"bucketed_batches={pl['bucketed_batches']} "
+          f"pad_slots={pl['pad_slots']} modes={pl['mode_counts']} "
+          f"retried={pl['retried_overflow']}/{pl['retried_saturated']}"
+          f"/{pl['retried_inexact_rank']}")
+    db.close()
 
 
 if __name__ == "__main__":

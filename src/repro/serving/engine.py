@@ -82,19 +82,28 @@ def _safe_corr(a: np.ndarray, b: np.ndarray) -> float:
 
 @dataclasses.dataclass
 class HedgedScanService:
-    """Simulates a replicated tablet-serving deployment.
+    """A replica/hedging POLICY on top of the client frontend.
 
-    ``table`` is the :class:`repro.api.SuffixTable` being served; scans go
-    through its merged read path, so appended-but-uncompacted data is
-    visible with exact counts.  A bare :class:`TabletStore` is still
-    accepted (deprecation shim) and wrapped in an in-memory table.
+    Since the client API redesign this service owns no scan execution:
+    every batch becomes a typed raw-codes :class:`repro.api.Query`
+    dispatched through a :class:`repro.api.Database` handle, which
+    routes by table name and coalesces with any other caller sharing
+    the handle (pass ``database=`` to share one).  What remains here is
+    the serving *policy* the paper's Table IV begs for — replicas,
+    simulated per-replica latency, and hedged backup requests.
 
-    ``replicas`` tablet-store replicas serve every scan batch; per-request
-    replica latency = base_ms * lognormal(sigma) with a pareto tail of
-    probability tail_p and scale tail_scale (the paper's 771 ms events).
-    A backup request fires after ``hedge_deadline_ms``; effective latency is
-    min(primary, deadline + backup).  Scan RESULTS come from the real
-    engine; only latency is simulated (no real multi-machine here).
+    ``table`` is the :class:`repro.api.SuffixTable` being served; reads
+    go through the table's merged LSM path, so appended-but-uncompacted
+    data is visible with exact counts.  A bare :class:`TabletStore` is
+    still accepted (deprecation shim) and wrapped in an in-memory table.
+
+    ``replicas`` tablet-store replicas serve every scan batch;
+    per-request replica latency = base_ms * lognormal(sigma) with a
+    pareto tail of probability tail_p and scale tail_scale (the paper's
+    771 ms events).  A backup request fires after ``hedge_deadline_ms``;
+    effective latency is min(primary, deadline + backup).  Scan RESULTS
+    come from the real engine; only latency is simulated (no real
+    multi-machine here).
     """
     table: "object"                  # SuffixTable | TabletStore (shim)
     replicas: int = 2
@@ -105,14 +114,19 @@ class HedgedScanService:
     hedge_deadline_ms: float = 15.0
     seed: int = 0
     planner: Optional[ScanPlanner] = None
+    database: Optional["object"] = None      # repro.api.Database
 
     def __post_init__(self):
+        from repro.api import Database
         from repro.api.table import SuffixTable
         if isinstance(self.table, TabletStore):
             self.table = SuffixTable.from_store(self.table,
                                                 planner=self.planner)
         if self.planner is None:
             self.planner = self.table.planner
+        if self.database is None:
+            self.database = Database.in_memory()
+        self.table_name = self.database.ensure_attached(self.table)
         # private generator (not a dataclass field): repeated workloads are
         # reproducible per service instance, and scan() no longer mutates
         # the dataclass's compare-by-value state (the old `self.seed += 1`)
@@ -131,10 +145,15 @@ class HedgedScanService:
         return lat
 
     def scan(self, patterns_packed, plen, hedged: bool = True):
-        """Returns (MatchResult, latency_ms per query).  Scans go through
-        the table's merged read path (base via the planner — routed-path
-        sentinels retried to exact counts — plus the memtable)."""
-        res = self.table.scan_encoded(patterns_packed, plen)
+        """Returns (QueryResult, latency_ms per query).  The batch rides
+        a typed raw-codes Query through the client (bucket-padded jitted
+        planner invocation, sentinel retry, merged LSM tiers)."""
+        from repro.api import Query
+        q = Query(table=self.table_name, kind="scan",
+                  codes=np.asarray(patterns_packed), lens=np.asarray(plen))
+        res = self.database.query(q)
+        if not res.ok:
+            raise RuntimeError(f"scan failed: {res.error}")
         rng = self._rng
         n = int(plen.shape[0])
         primary = self._latency(rng, n)

@@ -1,0 +1,166 @@
+"""Bench regression gate: compare a fresh ``--smoke`` run's JSON against
+the committed ``BENCH_*.json`` baseline and fail on a real regression.
+
+The perf surface (BENCH_planner / table / compaction / client / wal) was
+write-only until now: the weekly job produced numbers nobody compared.
+This gate makes it regression-checked:
+
+* **throughput metrics** (``*_per_s``, ``*speedup*``, ``*_rate``) must
+  not fall more than ``--threshold`` (default 25%) below the baseline;
+* **overhead ratios** (``*overhead*``) must not rise more than the
+  threshold above it;
+* **boolean exactness flags** (``bit_identical``, ``exact_*``,
+  ``recovered_all_acked``) that are true in the baseline must stay true
+  — a correctness regression is never a matter of degree;
+* **latency metrics** (``*_ms``, ``*_us_per_*``, ``*_s``) and plain
+  counts are reported but not gated: on shared CI runners their noise
+  swamps a 25% band, and every latency win already shows up in a gated
+  throughput metric.
+
+When the candidate's config (every top-level key except ``results``)
+differs from the baseline's — e.g. a full-size committed baseline vs a
+``--smoke`` candidate — absolute throughput is not comparable, so only
+the scale-invariant metrics (speedups, overheads, rates, booleans) are
+gated and a warning says so.  To tighten the gate, refresh the baseline
+at smoke sizes (docs/ci.md).
+
+    python benchmarks/check_regression.py \\
+        --pair BENCH_table.json=artifacts/BENCH_table.json \\
+        --pair BENCH_wal.json=artifacts/BENCH_wal.json [--threshold 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def flatten(d: dict, prefix: str = "") -> dict:
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten(v, key + "."))
+        else:
+            out[key] = v
+    return out
+
+
+def is_scale_invariant(name: str) -> bool:
+    """Ratios and flags keep their meaning across workload sizes."""
+    n = name.lower()
+    return ("speedup" in n or "overhead" in n or n.endswith("_x")
+            or n.endswith("_rate") or "identical" in n or "exact" in n
+            or "recovered" in n)
+
+
+def classify(name: str, value) -> str:
+    """'higher' / 'lower' (gated directions), 'flag', or 'info'."""
+    n = name.lower()
+    if isinstance(value, bool):
+        return "flag"
+    if not isinstance(value, (int, float)):
+        return "info"
+    if "overhead" in n:
+        return "lower"
+    if (n.endswith("_per_s") or n.endswith("_per_sec")
+            or "queries_per_s" in n or "speedup" in n
+            or n.endswith("_rate")):
+        return "higher"
+    return "info"
+
+
+def compare(baseline: dict, candidate: dict, threshold: float,
+            label: str) -> list[str]:
+    """Returns failure messages (empty = pass); prints a metric table."""
+    base_cfg = {k: v for k, v in baseline.items() if k != "results"}
+    cand_cfg = {k: v for k, v in candidate.items() if k != "results"}
+    cfg_match = base_cfg == cand_cfg
+    if not cfg_match:
+        diff = {k for k in set(base_cfg) | set(cand_cfg)
+                if base_cfg.get(k) != cand_cfg.get(k)}
+        print(f"[{label}] WARNING: config differs from baseline "
+              f"({sorted(diff)}) — gating only scale-invariant metrics")
+    base = flatten(baseline.get("results", {}))
+    cand = flatten(candidate.get("results", {}))
+    failures = []
+    for name in sorted(set(base) & set(cand)):
+        b, c = base[name], cand[name]
+        kind = classify(name, b)
+        gated = kind != "info" and (cfg_match or is_scale_invariant(name))
+        if kind == "flag":
+            ok = (not b) or bool(c)     # baseline-true must stay true
+            verdict = "OK" if ok else "FAIL"
+        elif not gated:
+            verdict = "info"
+            ok = True
+        elif kind == "higher":
+            ok = c >= b * (1.0 - threshold)
+            verdict = "OK" if ok else "FAIL"
+        else:                           # lower-better
+            ok = c <= b * (1.0 + threshold)
+            verdict = "OK" if ok else "FAIL"
+        print(f"[{label}] {verdict:>4s}  {name}: baseline={b} "
+              f"candidate={c}" + ("" if gated or kind == "flag"
+                                  else "  (not gated)"))
+        if not ok:
+            failures.append(
+                f"{label}: {name} regressed past {threshold:.0%} — "
+                f"baseline={b}, candidate={c}")
+    missing = sorted(set(base) - set(cand))
+    if missing:
+        failures.append(f"{label}: candidate is missing baseline "
+                        f"metrics {missing}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", action="append", default=[],
+                    metavar="BASELINE=CANDIDATE",
+                    help="a baseline/candidate JSON pair (repeatable)")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--candidate", default=None)
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max fractional regression (default 0.25)")
+    args = ap.parse_args(argv)
+    pairs = []
+    if args.baseline or args.candidate:
+        if not (args.baseline and args.candidate):
+            ap.error("--baseline and --candidate go together")
+        pairs.append((args.baseline, args.candidate))
+    for p in args.pair:
+        if "=" not in p:
+            ap.error(f"--pair wants BASELINE=CANDIDATE, got {p!r}")
+        pairs.append(tuple(p.split("=", 1)))
+    if not pairs:
+        ap.error("nothing to compare — pass --pair or "
+                 "--baseline/--candidate")
+    if not 0 < args.threshold < 1:
+        ap.error("--threshold must be in (0, 1)")
+
+    failures = []
+    for base_path, cand_path in pairs:
+        label = base_path.rsplit("/", 1)[-1]
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(cand_path) as f:
+            candidate = json.load(f)
+        if baseline.get("bench") != candidate.get("bench"):
+            failures.append(f"{label}: bench id mismatch "
+                            f"({baseline.get('bench')} vs "
+                            f"{candidate.get('bench')})")
+            continue
+        failures.extend(compare(baseline, candidate, args.threshold,
+                                label))
+    if failures:
+        print("\nREGRESSIONS DETECTED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(f"\nall gated metrics within {args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

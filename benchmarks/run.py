@@ -11,7 +11,7 @@ import sys
 
 def main() -> None:
     from benchmarks import client_bench, compaction_bench, kernel_bench, \
-        paper_tables, roofline, table_bench
+        paper_tables, roofline, table_bench, wal_bench
 
     benches = [
         ("table1_preprocess_build", paper_tables.bench_build_table1),
@@ -26,6 +26,7 @@ def main() -> None:
         ("table_merged_scan", table_bench.bench_table_ops),
         ("lsm_compaction", compaction_bench.bench_compaction),
         ("client_coalescing", client_bench.bench_client),
+        ("wal_group_commit", wal_bench.bench_wal),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

@@ -14,7 +14,9 @@ from repro.api.client import Database, Page, Query, QueryFuture, \
 from repro.api.memtable import Memtable
 from repro.api.runs import Run
 from repro.api.table import SuffixTable, default_root, open_table
+from repro.api.wal import RecoverySummary, WriteAheadLog
 
 __all__ = ["Catalog", "Database", "Memtable", "Page", "Query",
            "QueryFuture", "QueryResult", "QueryScheduler", "ReadSession",
-           "Run", "SuffixTable", "default_root", "open_table"]
+           "RecoverySummary", "Run", "SuffixTable", "WriteAheadLog",
+           "default_root", "open_table"]

@@ -9,9 +9,15 @@ A catalog manages multiple named :class:`~repro.api.table.SuffixTable`\\ s
         step_0000000001/           #   atomic versioned snapshots
           arrays.npz  meta.json    #   codes + sa_real + mem_codes
         step_0000000002/ ...
+        wal/wal.log                #   the table's live commit-log segment
 
 ``catalog.json`` is rewritten atomically (tmp + ``os.replace``) so a
-preempted create/drop never corrupts the listing.
+preempted create/drop never corrupts the listing.  Commit logs
+(``repro.api.wal``) live under the catalog root INSIDE each table's
+directory, so ``drop_table`` and the crashed-create reconcile in
+``SuffixTable.create`` remove a table's log together with its
+snapshots — an orphan log can never be replayed into a different
+table that later reuses the name.
 """
 from __future__ import annotations
 
@@ -22,6 +28,12 @@ import tempfile
 from typing import Optional
 
 from repro.api.table import SuffixTable, default_root
+
+
+def table_wal_dir(root: str, name: str) -> str:
+    """Directory holding ``name``'s commit-log segments under ``root``
+    (the single place the WAL path layout is decided)."""
+    return os.path.join(root, name, "wal")
 
 
 class Catalog:
@@ -68,6 +80,10 @@ class Catalog:
 
     def __contains__(self, name: str) -> bool:
         return name in self.load()["tables"]
+
+    def wal_dir(self, name: str) -> str:
+        """Where ``name``'s commit log lives (``repro.api.wal``)."""
+        return table_wal_dir(self.root, name)
 
     # -- table lifecycle -----------------------------------------------------
     def create_table(self, name: str, codes, **kw) -> SuffixTable:

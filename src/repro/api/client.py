@@ -587,6 +587,7 @@ class Database:
         self.catalog = Catalog(root) if root is not None else None
         self._open_kw = dict(open_kw)
         self._tables: dict[str, SuffixTable] = {}
+        self._owned: set[str] = set()       # opened/created by this handle
         self._open_lock = threading.Lock()
         self.scheduler = QueryScheduler(
             self.table, window_ms=coalesce_window_ms, max_batch=max_batch)
@@ -614,6 +615,7 @@ class Database:
                 if t is None:
                     t = self.catalog.open_table(name, **self._open_kw)
                     self._tables[name] = t
+                    self._owned.add(name)
         return t
 
     def attach(self, name: str, table: SuffixTable) -> SuffixTable:
@@ -652,6 +654,7 @@ class Database:
                                "with SuffixTable.from_codes instead")
         t = self.catalog.create_table(name, codes, **kw)
         self._tables[name] = t
+        self._owned.add(name)
         return t
 
     def drop_table(self, name: str, *, missing_ok: bool = False) -> None:
@@ -660,8 +663,13 @@ class Database:
                 raise KeyError(f"no table {name!r} attached to this "
                                f"in-memory database")
             return
+        # catalog validates (and raises) BEFORE we detach: a failed drop
+        # must leave an attached/cached table routed and usable
         self.catalog.drop_table(name, missing_ok=missing_ok)
-        self._tables.pop(name, None)
+        t = self._tables.pop(name, None)
+        if t is not None:
+            t.close()                 # release the dropped table's log fd
+        self._owned.discard(name)
 
     def list_tables(self) -> list[str]:
         names = set(self._tables)
@@ -692,10 +700,19 @@ class Database:
         in-flight query batches, so concurrent readers on this handle
         never observe a torn multi-tier view (mutating a table directly
         while other threads read through the client is not
-        synchronized).  Triggers the table's automatic minor/major
-        compactions as usual; returns the memtable size."""
+        synchronized).  On a persistent table this call is a **durable
+        write ack**: the commit record is logged under the table lock
+        but the fsync is awaited OUTSIDE it, so concurrent clients
+        appending to the same table batch into one group-commit fsync
+        (the write-side mirror of read coalescing — the table's
+        ``group_commit_ms`` sets the batching window) while the next
+        writer's mutation proceeds.  Triggers the table's automatic
+        minor/major compactions as usual; returns the memtable size."""
         t = self.table(table)
-        return self.scheduler.run_exclusive(t, lambda: t.append(codes))
+        size, token = self.scheduler.run_exclusive(
+            t, lambda: t.append_nowait(codes))
+        t.wait_durable(token)
+        return size
 
     def compact(self, table: str) -> int:
         """Major-compact through the client (serialized like
@@ -723,7 +740,14 @@ class Database:
                            for name, t in sorted(self._tables.items())}}
 
     def close(self) -> None:
+        """Drain the scheduler, then release the commit-log handles of
+        every table THIS handle opened or created (attached tables stay
+        open — the attacher owns their lifecycle)."""
         self.scheduler.close()
+        for name in sorted(self._owned):
+            t = self._tables.get(name)
+            if t is not None:
+                t.close()
 
     def __enter__(self) -> "Database":
         return self

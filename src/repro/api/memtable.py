@@ -72,22 +72,37 @@ class Memtable:
         self._sa_host: Optional[np.ndarray] = None
 
     # -- write --------------------------------------------------------------
-    def append(self, codes) -> int:
-        """Add codes to the memtable; returns the new memtable size."""
+    @staticmethod
+    def validate_codes(codes, *, is_dna: bool) -> np.ndarray:
+        """Shape/range-check an append batch and return it as an array.
+        Factored out of :meth:`append` so the table's write-ahead log can
+        reject a bad batch BEFORE framing it as a commit record — an
+        invalid append must fail the caller, never poison the log."""
         codes = np.asarray(codes)
         if codes.ndim != 1:
             raise ValueError(f"append expects a 1-D code array, "
                              f"got shape {codes.shape}")
         if codes.size == 0:
-            return self.size
+            return codes
         if int(codes.min()) < 0:
             # a negative code would wrap on the uint8 DNA cast (corrupting
             # the index) and aliases the generic store's -1 padding
             raise ValueError("appended codes must be non-negative "
                              f"(got min {int(codes.min())})")
-        if self.is_dna and int(codes.max()) > 3:
+        if is_dna and int(codes.max()) > 3:
             raise ValueError("DNA table: appended codes must be in {0..3} "
                              "(use codec.encode_dna for strings)")
+        return codes
+
+    def append(self, codes, *, _prevalidated: bool = False) -> int:
+        """Add codes to the memtable; returns the new memtable size.
+        ``_prevalidated`` skips re-checking a batch the table already
+        ran through :meth:`validate_codes` before logging it (the
+        min/max scans are pure waste the second time)."""
+        if not _prevalidated:
+            codes = self.validate_codes(codes, is_dna=self.is_dna)
+        if codes.size == 0:
+            return self.size
         self._chunks.append(codes.astype(self._dtype))
         self.size += int(codes.size)
         self._store = None                  # rebuild lazily on next read

@@ -26,6 +26,12 @@ No occurrence ending inside run *i* can start before ``start_i -
 (max_query_len - 1)``, the left edge of its overlap window, so each run's
 small index sees everything it must report.
 
+Durability: a run becomes durable the moment the seal's snapshot publish
+lands (``SuffixTable.minor_compact`` re-persists), at which point the
+commit log (:mod:`repro.api.wal`) that was covering those appends is
+truncated — the log only ever protects the *active* memtable, never
+sealed runs or the base.
+
 Run stores share the memtable's *bucket-padded* text layout: the text is
 padded to a power-of-two length with symbol 0, so the jitted query
 specializes on O(log) distinct shapes instead of one per run, and the

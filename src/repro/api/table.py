@@ -15,8 +15,13 @@ point; callers no longer hand-wire ``build_tablet_store`` + ``ScanPlanner``
 * reads (:meth:`count` / :meth:`contains` / :meth:`scan` / :meth:`locate`)
   delegate to the :class:`~repro.core.planner.ScanPlanner` for the base
   index and merge in the LSM delta tiers (below);
-* the write path is a real LSM stack: :meth:`append` lands codes in a
-  single-device :class:`~repro.api.memtable.Memtable`;
+* the write path is a real LSM stack **paired with a commit log**
+  (:mod:`repro.api.wal`, Bigtable's memtable+log discipline): every
+  :meth:`append` on a persistent table is CRC-framed, fsync'd, and only
+  then acked, so acknowledged writes survive crashes — :meth:`open`
+  replays the live log tail through the normal memtable path and
+  reports a recovery summary in :meth:`stats`; :meth:`append` lands
+  codes in a single-device :class:`~repro.api.memtable.Memtable`;
   :meth:`minor_compact` seals the memtable into an immutable, persisted
   :class:`~repro.api.runs.Run` (automatic at ``memtable_limit``); reads
   fan out to base + runs + memtable and merge exact counts and positions,
@@ -44,6 +49,7 @@ import numpy as np
 from repro.api.compaction import merge_delta_sa
 from repro.api.memtable import Memtable
 from repro.api.runs import Run, logical_tail
+from repro.api.wal import WriteAheadLog
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import codec
 from repro.core.planner import ScanOutcome, ScanPlanner, TopKCache
@@ -113,6 +119,8 @@ class SuffixTable:
                  memtable_limit: Optional[int] = None,
                  max_runs: Optional[int] = None,
                  distributed_build: Optional[bool] = None,
+                 wal: Optional[bool] = None,
+                 group_commit_ms: float = 0.0,
                  _store: Optional[TabletStore] = None,
                  _planner: Optional[ScanPlanner] = None):
         self.name = name
@@ -150,6 +158,19 @@ class SuffixTable:
         if self.root is not None and self.name is not None:
             self._manager = CheckpointManager(
                 os.path.join(self.root, self.name), keep_n=self.keep_n)
+        # commit log (repro.api.wal): defaults ON for persistent tables;
+        # attached by create()/open() — after the snapshot exists, so the
+        # log only ever covers appends the snapshot does not
+        if wal and self._manager is None:
+            raise ValueError("wal=True needs a persistent table (create/"
+                             "open with a root); in-memory tables have "
+                             "nothing to recover into")
+        self._wal_on = (self._manager is not None) if wal is None else wal
+        self.group_commit_ms = float(group_commit_ms)
+        self._wal: Optional[WriteAheadLog] = None
+        self._wal_seq = 0            # seq of the last logged/applied append
+        self._recovery: Optional[dict] = None
+        self._replaying = False
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -215,6 +236,7 @@ class SuffixTable:
         catalog.register(name, {"is_dna": table.is_dna,
                                 "max_query_len": table.max_query_len})
         table._persist()
+        table._open_wal(fresh=True)
         return table
 
     @classmethod
@@ -253,6 +275,10 @@ class SuffixTable:
         mem = arrays.get("mem_codes")
         if mem is not None and mem.size:
             table.memtable.append(mem)
+        # crash recovery: replay the commit-log tail (appends acked after
+        # this snapshot was published) through the normal memtable path
+        table._wal_seq = int(extra.get("wal_seq", 0))
+        table._open_wal(fresh=False)
         return table
 
     @staticmethod
@@ -330,6 +356,12 @@ class SuffixTable:
           accounting (``bucketed_batches`` / ``bucketed_queries`` /
           ``pad_slots``) fed by the client frontend.  (True cross-caller
           coalescing counters live in ``Database.stats()["scheduler"]``.)
+        * ``wal`` — durability: ``enabled``, ``seq`` (last append's
+          commit sequence), ``log`` (appends/fsyncs/seals counters, or
+          ``None`` with no log), and ``recovery`` — ``None`` on a clean
+          open, otherwise the last recovery summary
+          (``records_replayed`` / ``records_skipped`` / ``torn_bytes`` /
+          ``reason`` — docs/table_api.md gives the full schema).
 
         New keys may be added; existing keys keep their meaning."""
         return {
@@ -350,6 +382,13 @@ class SuffixTable:
                 "generation": self._cache.generation,
             },
             "planner": self.planner.stats.as_dict(),
+            "wal": {
+                "enabled": self._wal is not None,
+                "seq": self._wal_seq,
+                "log": (self._wal.stats() if self._wal is not None
+                        else None),
+                "recovery": self._recovery,
+            },
         }
 
     def _invalidate_caches(self) -> None:
@@ -592,22 +631,123 @@ class SuffixTable:
         return self.scan(patterns, top_k=top_k).positions
 
     # -- write path ----------------------------------------------------------
+    def _open_wal(self, *, fresh: bool) -> None:
+        """Attach the table's commit log.  ``fresh=True`` (create) starts
+        an empty segment; ``fresh=False`` (open) recovers the live one:
+        torn tails are discarded by CRC, records the latest snapshot
+        already covers are skipped by sequence number, and the rest —
+        exactly the appends acked after that snapshot — replay through
+        the normal memtable path.  The summary lands in
+        ``stats()["wal"]["recovery"]``."""
+        from repro.api.catalog import table_wal_dir
+        if self._manager is None:
+            return
+        path = os.path.join(table_wal_dir(self.root, self.name), "wal.log")
+        if not self._wal_on:
+            # opting out with a live log on disk: move it aside.  The
+            # table's state will diverge from the log (appends now take
+            # sequence numbers the log never sees), so a LATER wal=True
+            # open must not find this segment and splice its stale
+            # records into the diverged text — the orphan is preserved
+            # for manual inspection, never replayed.
+            if os.path.exists(path):
+                os.replace(path, path + ".orphaned")
+            return
+        if fresh or not os.path.exists(path):
+            self._wal = WriteAheadLog.create(
+                path, start_seq=self._wal_seq + 1,
+                group_commit_ms=self.group_commit_ms)
+            return
+        wal = WriteAheadLog(path, group_commit_ms=self.group_commit_ms)
+        records, summary = wal.recover()
+        self._wal = wal
+        self._replaying = True      # no auto-seal mid-replay: a seal here
+        try:                        # would truncate records not yet applied
+            for seq, codes in records:
+                if seq <= self._wal_seq:
+                    summary.records_skipped += 1
+                    continue
+                if seq != self._wal_seq + 1:
+                    # the log starts past the snapshot: records between
+                    # them are gone, so nothing later can be applied
+                    summary.reason = "snapshot_gap"
+                    break
+                self._apply_append(codes)
+                self._wal_seq = seq
+                summary.records_replayed += 1
+        finally:
+            self._replaying = False
+        self._recovery = summary.as_dict()
+        if wal._last_written_seq != self._wal_seq:
+            # only stale (< snapshot) or unreachable (snapshot_gap)
+            # records remain in the segment — re-seal so the next append
+            # gets a contiguous sequence
+            wal.seal(self._wal_seq + 1)
+        if (self.memtable_limit is not None
+                and self.memtable.size >= self.memtable_limit):
+            self.minor_compact()    # deferred from replay; persists + seals
+
     def append(self, codes) -> int:
         """Append text to the table (memtable write path); visible to all
-        subsequent reads with exact merged counts.  Returns the memtable
-        size; triggers :meth:`minor_compact` at ``memtable_limit`` (and,
-        through it, :meth:`compact` at ``max_runs``)."""
+        subsequent reads with exact merged counts.  On a persistent table
+        the batch is committed to the write-ahead log and **fsync'd
+        before this method returns** — the returned ack means durable.
+        Returns the memtable size; triggers :meth:`minor_compact` at
+        ``memtable_limit`` (and, through it, :meth:`compact` at
+        ``max_runs``)."""
+        size, token = self.append_nowait(codes)
+        self.wait_durable(token)
+        return size
+
+    def append_nowait(self, codes) -> tuple[int, Optional[int]]:
+        """The two-phase append underneath :meth:`append`: validate, log
+        the commit record (buffered, not yet fsync'd), apply to the
+        memtable, and return ``(memtable_size, durability_token)``.  The
+        caller must pass the token to :meth:`wait_durable` before acking
+        — ``Database.append`` does exactly that, waiting OUTSIDE the
+        table's write lock so concurrent clients share one group-commit
+        fsync.  Readers may observe the appended text before it is
+        durable (standard commit-wait semantics); the ack is what
+        promises crash survival."""
         if isinstance(codes, (str, bytes, bytearray)):
             if not self.is_dna:
                 raise TypeError("string appends are DNA-only; pass a code "
                                 "array for token tables")
             codes = codec.encode_dna(codes)
-        self.memtable.append(codes)
+        # validate BEFORE logging: a bad batch must fail the caller, not
+        # poison the log with a record that re-raises on every recovery
+        codes = Memtable.validate_codes(codes, is_dna=self.is_dna)
+        if codes.size == 0:
+            return self.memtable.size, None
+        token = None
+        if self._wal is not None:
+            # log first, bump after: a failed write (disk full) leaves
+            # the counter aligned with the log so a retry isn't wedged
+            # on a phantom sequence number
+            token = self._wal.append(codes, self._wal_seq + 1)
+        self._wal_seq += 1          # counted even unlogged: snapshots
+        self._apply_append(codes)   # persist it, keeping replay aligned
+        return self.memtable.size, token
+
+    def wait_durable(self, token: Optional[int]) -> None:
+        """Block until the append that returned ``token`` is on disk
+        (fsync'd, or covered by a sealed snapshot).  No-op for ``None``
+        (empty appends, tables without a log)."""
+        if token is not None and self._wal is not None:
+            self._wal.wait(token)
+
+    def _apply_append(self, codes: np.ndarray) -> None:
+        """Memtable apply + cache invalidation — shared by live appends
+        and log replay (replay defers the ``memtable_limit`` check: an
+        auto-seal mid-replay would truncate not-yet-applied records).
+        Callers guarantee ``codes`` passed ``validate_codes`` (live
+        appends check before logging; replayed records were checked
+        before they were ever logged)."""
+        self.memtable.append(codes, _prevalidated=True)
         self._invalidate_caches()
-        if (self.memtable_limit is not None
+        if (not self._replaying and self.memtable_limit is not None
                 and self.memtable.size >= self.memtable_limit):
             self.minor_compact()
-        return self.memtable.size
 
     def minor_compact(self) -> int:
         """Seal the active memtable into an immutable
@@ -681,6 +821,13 @@ class SuffixTable:
                 "SuffixTable.create(...) to get durable storage")
         self._persist()
 
+    def close(self) -> None:
+        """Release the commit-log file handle.  Reads keep working; a
+        later :meth:`append` raises instead of silently losing
+        durability (reopen the table to resume writing)."""
+        if self._wal is not None:
+            self._wal.close()
+
     def _persist(self) -> None:
         if self._manager is None:
             return
@@ -699,7 +846,8 @@ class SuffixTable:
                  "version": self.version, "is_dna": self.is_dna,
                  "max_query_len": self.max_query_len,
                  "n_base": self.n_base, "runs": runs_meta,
-                 "mem_len": self.memtable.size}
+                 "mem_len": self.memtable.size,
+                 "wal_seq": self._wal_seq}
         # always publish under a FRESH step: CheckpointManager.save on an
         # existing step rmtree's it before the rename, so re-publishing
         # the same version in place (flush / every automatic seal) would
@@ -707,6 +855,12 @@ class SuffixTable:
         # plain publish sequence; the table version rides in ``extra``.
         step = (self._manager.latest_step() or 0) + 1
         self._manager.save(step, state, extra=extra)
+        if self._wal is not None:
+            # ONLY after the snapshot is published may the log be
+            # truncated — there is never a moment with zero durable
+            # copies of an acked append.  A crash landing between save
+            # and seal is caught by the seq skip on replay.
+            self._wal.seal(self._wal_seq + 1)
 
 
 # Back-compat: the pre-table spelling, one call deep.

@@ -58,6 +58,16 @@ def main(argv=None):
     ap.add_argument("--max-runs", type=int, default=None,
                     help="fold runs into the base (major compaction, "
                          "merge-based) once this many are live")
+    ap.add_argument("--wal", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="write-ahead commit log for persistent tables: "
+                         "appends are CRC-framed and fsync'd before the "
+                         "ack, and reopen replays the log tail "
+                         "(--no-wal restores the volatile pre-log path)")
+    ap.add_argument("--group-commit-ms", type=float, default=0.0,
+                    help="group-commit window: concurrent client appends "
+                         "arriving within this many ms share ONE fsync "
+                         "before acking (0 = fsync per append)")
     ap.add_argument("--root", default=None,
                     help="catalog root dir; omit for an in-memory table")
     ap.add_argument("--table", default="dna_serve",
@@ -69,9 +79,11 @@ def main(argv=None):
 
     n_dev = len(jax.devices())
     lsm = {"memtable_limit": args.memtable_limit, "max_runs": args.max_runs}
-    # open_kw reach every table this handle opens from disk — the reopen
-    # path must honor --capacity-factor just like the create path does
-    open_kw = dict(lsm, capacity_factor=args.capacity_factor)
+    # durability knobs only make sense with a root (in-memory tables have
+    # no log); open_kw reach every table this handle opens from disk — the
+    # reopen path must honor --capacity-factor just like create does
+    wal_kw = {"wal": args.wal, "group_commit_ms": args.group_commit_ms}
+    open_kw = dict(lsm, capacity_factor=args.capacity_factor, **wal_kw)
     db = Database(args.root, coalesce_window_ms=args.coalesce_window,
                   **(open_kw if args.root is not None else {}))
 
@@ -82,7 +94,14 @@ def main(argv=None):
         table = db.table(args.table)
         print(f"[open ] v{table.version}, {len(table)} bases "
               f"({len(table.runs)} run(s)) in {time.time() - t0:.1f}s "
-              f"(no rebuild)")
+              f"(no rebuild, cf={table.capacity_factor})")
+        rec = table.stats()["wal"]["recovery"]
+        if rec is not None and (rec["records_replayed"]
+                                or rec["torn_bytes"]):
+            print(f"[wal  ] recovered: replayed="
+                  f"{rec['records_replayed']} skipped="
+                  f"{rec['records_skipped']} torn_bytes="
+                  f"{rec['torn_bytes']} ({rec['reason']})")
     else:
         print(f"[build] suffix array over {args.text_len} bases "
               f"({n_dev} device(s)) ...", flush=True)
@@ -94,7 +113,7 @@ def main(argv=None):
         else:
             table = db.create_table(
                 args.table, codes, is_dna=True,
-                capacity_factor=args.capacity_factor, **lsm)
+                capacity_factor=args.capacity_factor, **lsm, **wal_kw)
         dt = time.time() - t0
         print(f"[build] done in {dt:.1f}s "
               f"({args.text_len / max(dt, 1e-9) / 1e6:.2f} Mbase/s)")
@@ -127,7 +146,8 @@ def main(argv=None):
     elif args.root is not None:
         aux = db.create_table(args.aux_table,
                               random_dna(args.text_len // 4,
-                                         seed=args.seed + 17), is_dna=True)
+                                         seed=args.seed + 17), is_dna=True,
+                              **wal_kw)
     else:
         aux = db.attach(args.aux_table, SuffixTable.from_codes(
             random_dna(args.text_len // 4, seed=args.seed + 17),
@@ -190,6 +210,13 @@ def main(argv=None):
           f"pad_slots={pl['pad_slots']} modes={pl['mode_counts']} "
           f"retried={pl['retried_overflow']}/{pl['retried_saturated']}"
           f"/{pl['retried_inexact_rank']}")
+    w = st["wal"]
+    if w["enabled"]:
+        print(f"[wal   ] seq={w['seq']} appends={w['log']['appends']} "
+              f"fsyncs={w['log']['fsyncs']} seals={w['log']['seals']} "
+              f"group_commit_ms={w['log']['group_commit_ms']}")
+    else:
+        print("[wal   ] disabled (in-memory table or --no-wal)")
     db.close()
 
 

@@ -92,6 +92,11 @@ def test_database_routes_and_lifecycle(tmp_path):
     mdb.drop_table("t", missing_ok=True)           # quiet, like the catalog
     with pytest.raises(KeyError):
         mdb.drop_table("t")
+    # a FAILED drop (attached name, not in the catalog) must leave the
+    # attached table routed and serving — not detached-and-closed
+    with pytest.raises(KeyError):
+        db.drop_table("scratch")
+    assert int(db.query(Query.count("scratch", ["A"])).value[0]) >= 0
     db.close(), db2.close(), mdb.close()
 
 
@@ -363,10 +368,12 @@ def test_stats_schema_is_stable_and_documented():
     table.append(codec.random_dna(250, seed=13))   # triggers a seal
     s = table.stats()
     assert set(s) == {"name", "version", "is_dna", "max_query_len",
-                      "tiers", "cache", "planner"}
+                      "tiers", "cache", "planner", "wal"}
     assert set(s["tiers"]) == {"base_rows", "run_count", "run_rows",
                                "memtable_rows"}
     assert set(s["cache"]) == {"entries", "hits", "misses", "generation"}
+    assert set(s["wal"]) == {"enabled", "seq", "log", "recovery"}
+    assert s["wal"]["enabled"] is False      # in-memory table: no log
     assert s["tiers"]["base_rows"] == 800 and s["tiers"]["run_count"] == 1
     assert s["cache"]["hits"] >= 1 and s["cache"]["generation"] >= 1
     for key in ("batches", "queries", "bucketed_batches",

@@ -1,0 +1,87 @@
+"""CLI coverage for ``repro.launch.serve`` — previously hand-run only.
+
+Each test drives ``serve.main`` in-process with tiny sizes and asserts
+on the printed protocol: the create/reopen split, LSM knobs, the
+coalescing demo, the streaming demo, and the new durability flags
+(``--wal`` / ``--group-commit-ms``).
+"""
+import ast
+import os
+
+import pytest
+
+from repro.api import SuffixTable
+from repro.launch import serve
+
+TINY = ["--text-len", "1500", "--queries", "120", "--batch", "48",
+        "--max-pattern", "12", "--top-k", "2", "--page-size", "16",
+        "--coalesce-window", "0.5"]
+
+
+def test_serve_in_memory_end_to_end(capsys):
+    serve.main(TINY)
+    out = capsys.readouterr().out
+    assert "[build]" in out and "[open ]" not in out
+    assert "[single]" in out and "[hedged]" in out
+    assert "[client]" in out and "dispatch(es)" in out
+    assert "[stream]" in out and "[write ]" in out
+    assert "[wal   ] disabled" in out          # in-memory: no log
+    # the streaming demo's paged total must equal the one-shot count
+    line = next(ln for ln in out.splitlines() if ln.startswith("[stream]"))
+    n_pos = int(line.split(":")[1].split()[0])
+    want = int(line.split("one-shot count")[1].strip(" )\n"))
+    assert n_pos == want
+
+
+def test_serve_create_then_reopen_honors_flags(tmp_path, capsys):
+    root = str(tmp_path / "root")
+    args = TINY + ["--root", root, "--table", "t1", "--aux-table", "t2",
+                   "--memtable-limit", "600", "--max-runs", "2",
+                   "--group-commit-ms", "1.0"]
+    serve.main(args)
+    first = capsys.readouterr().out
+    assert "[build]" in first
+    assert "[wal   ] seq=" in first            # log active on the root
+    assert os.path.isdir(os.path.join(root, "t1", "wal"))
+
+    serve.main(args + ["--capacity-factor", "1.5"])
+    second = capsys.readouterr().out
+    assert "[open ]" in second and "[build]" not in second
+    assert "(no rebuild, cf=1.5)" in second    # reopen honors the flag
+    assert "[tiers ]" in second and "[wal   ] seq=" in second
+
+    # the two runs' write demos both landed durably: each appends the
+    # 21-base planted pattern + 993 random bases
+    t = SuffixTable.open("t1", root=root)
+    assert len(t) == 1500 + 2 * (21 + 993)
+
+
+def test_serve_no_wal_flag(tmp_path, capsys):
+    root = str(tmp_path / "root")
+    serve.main(TINY + ["--root", root, "--no-wal"])
+    out = capsys.readouterr().out
+    assert "[wal   ] disabled" in out
+    assert not os.path.exists(os.path.join(root, "dna_serve", "wal"))
+
+
+def test_serve_rejects_contradictory_sizes():
+    with pytest.raises(SystemExit):
+        serve.main(["--queries", "not-a-number"])
+
+
+def test_serve_clamps_max_pattern(capsys):
+    serve.main(TINY + ["--max-pattern", "4096"])
+    out = capsys.readouterr().out
+    assert "[clamp ]" in out and "-> 128" in out
+
+
+def test_serve_locate_rows_are_real_positions(capsys):
+    serve.main(TINY)
+    out = capsys.readouterr().out
+    # every locate row printed must be ascending non-negative positions
+    for line in out.splitlines():
+        if line.startswith("[locate]") and "first_" in line:
+            shown = line.split("=", 2)[-1].strip()
+            row = ast.literal_eval(shown)
+            assert row == sorted(row)
+            assert all(isinstance(x, int) and x >= 0 for x in row)

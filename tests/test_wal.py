@@ -1,0 +1,364 @@
+"""Crash-injection tests for the per-table commit log (repro.api.wal).
+
+The durability contract under test: an append acked by a persistent
+``SuffixTable`` survives a crash at ANY byte boundary of the log —
+reopen recovers a logical text bit-identical to an oracle that never
+crashed — while a torn (unacked) tail record is discarded whole, never
+partially applied.  Crashes are injected by abandoning the live table
+object and copying its directory (the disk at crash time), then
+truncating or corrupting the copied ``wal.log`` at chosen offsets.
+"""
+import os
+import shutil
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import Database, SuffixTable
+from repro.api.catalog import table_wal_dir
+from repro.api.wal import HEADER_SIZE, WriteAheadLog, read_segment
+from repro.core import codec
+
+
+def _full_text(t: SuffixTable) -> np.ndarray:
+    """The table's logical text across every tier, in order."""
+    parts = [np.asarray(t._codes)] + [np.asarray(r.codes) for r in t.runs]
+    if t.memtable.size:
+        parts.append(np.asarray(t.memtable.appended))
+    return np.concatenate([p.astype(np.int64) for p in parts])
+
+
+def _wal_path(root, name="t") -> str:
+    return os.path.join(table_wal_dir(str(root), name), "wal.log")
+
+
+def _crash_copy(root, dst) -> str:
+    """Simulate a crash: the in-memory table is abandoned, the on-disk
+    state (snapshots + live log) is whatever the copy captures."""
+    shutil.copytree(str(root), str(dst))
+    return str(dst)
+
+
+def _scan_matches_oracle(table, acked: np.ndarray, patterns) -> None:
+    oracle = SuffixTable.from_codes(acked.astype(np.uint8), is_dna=True)
+    got = table.scan(list(patterns), top_k=8)
+    want = oracle.scan(list(patterns), top_k=8)
+    assert (got.count == want.count).all()
+    assert (got.first_pos == want.first_pos).all()
+    assert (got.positions == want.positions).all()
+
+
+# ---------------------------------------------------------------------------
+# acked appends survive crashes — random schedules vs an oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_crash_recovers_acked_appends_over_random_schedule(tmp_path, seed):
+    rng = np.random.default_rng(seed)
+    base = codec.random_dna(600, seed=seed)
+    t = SuffixTable.create("t", base, root=str(tmp_path / "root"),
+                           max_query_len=16)
+    acked = [np.asarray(base, np.int64)]
+    for _ in range(12):
+        op = rng.choice(["append", "append", "append", "minor", "major"])
+        if op == "append":
+            chunk = codec.random_dna(int(rng.integers(1, 40)),
+                                     seed=int(rng.integers(1 << 30)))
+            t.append(chunk)                  # returns == acked durable
+            acked.append(np.asarray(chunk, np.int64))
+        elif op == "minor":
+            t.minor_compact()
+        else:
+            t.compact()
+    acked = np.concatenate(acked)
+    crash = _crash_copy(tmp_path / "root", tmp_path / f"crash{seed}")
+    t2 = SuffixTable.open("t", root=crash)
+    assert np.array_equal(_full_text(t2), acked), "acked text lost"
+    _scan_matches_oracle(t2, acked, ["ACGT", "GATTACA", "TT", "CCG"])
+    rec = t2.stats()["wal"]["recovery"]
+    assert rec is None or rec["reason"] == "clean"
+
+
+def test_writer_killed_at_every_byte_boundary(tmp_path):
+    """The tentpole property: truncate the log at EVERY byte offset (a
+    writer killed mid-write leaves exactly such a prefix).  Records
+    wholly on disk are acked appends and must all be recovered; a
+    partial tail record must vanish whole — the recovered text is
+    always ``base + appends[:k]`` for the k fully-durable records."""
+    base = codec.random_dna(300, seed=7)
+    root = tmp_path / "root"
+    t = SuffixTable.create("t", base, root=str(root), max_query_len=16)
+    chunks = [codec.random_dna(n, seed=50 + n) for n in (6, 11, 3, 17, 9)]
+    for c in chunks:
+        t.append(c)
+    start_seq, records, summary = read_segment(_wal_path(root))
+    assert summary.reason == "clean" and len(records) == len(chunks)
+    boundaries = [HEADER_SIZE] + [end for _, _, end in records]
+    log_len = os.path.getsize(_wal_path(root))
+    assert boundaries[-1] == log_len
+
+    prefixes = [np.asarray(base, np.int64)]
+    for c in chunks:
+        prefixes.append(np.concatenate(
+            [prefixes[-1], np.asarray(c, np.int64)]))
+
+    for cut in range(log_len + 1):
+        crash = str(tmp_path / "cut")
+        shutil.rmtree(crash, ignore_errors=True)
+        _crash_copy(root, crash)
+        with open(_wal_path(crash), "r+b") as f:
+            f.truncate(cut)
+        t2 = SuffixTable.open("t", root=crash)
+        # k = records fully contained in the first `cut` bytes
+        k = sum(1 for b in boundaries[1:] if b <= cut)
+        got = _full_text(t2)
+        assert np.array_equal(got, prefixes[k]), (
+            f"cut={cut}: recovered {got.size} symbols, want the "
+            f"{k}-record prefix ({prefixes[k].size}) — a torn record "
+            f"must never be partially applied")
+        rec = t2.stats()["wal"]["recovery"]
+        if cut < HEADER_SIZE:
+            assert rec["reason"] == "missing_header"
+        elif cut in boundaries:
+            assert rec["reason"] == "clean" and rec["torn_bytes"] == 0
+        else:
+            assert rec["reason"] != "clean" and rec["torn_bytes"] > 0
+        assert rec["records_replayed"] == k
+        if cut in boundaries:           # scan-level bit-identity per record
+            _scan_matches_oracle(t2, prefixes[k], ["ACG", "TTT", "GAT"])
+
+
+def test_corrupt_record_discards_it_and_everything_after(tmp_path):
+    base = codec.random_dna(200, seed=3)
+    root = tmp_path / "root"
+    t = SuffixTable.create("t", base, root=str(root), max_query_len=16)
+    chunks = [codec.random_dna(8, seed=80 + i) for i in range(4)]
+    for c in chunks:
+        t.append(c)
+    _, records, _ = read_segment(_wal_path(root))
+    crash = _crash_copy(root, tmp_path / "crash")
+    # flip one payload byte inside record 2 (0-indexed): CRC must kill
+    # it AND records 3+ (nothing after a corrupt record is trustworthy)
+    with open(_wal_path(crash), "r+b") as f:
+        f.seek(records[2][2] - 3)
+        b = f.read(1)
+        f.seek(records[2][2] - 3)
+        f.write(bytes([b[0] ^ 0xFF]))
+    t2 = SuffixTable.open("t", root=crash)
+    want = np.concatenate([np.asarray(base, np.int64)]
+                          + [np.asarray(c, np.int64) for c in chunks[:2]])
+    assert np.array_equal(_full_text(t2), want)
+    rec = t2.stats()["wal"]["recovery"]
+    assert rec["reason"] == "crc_mismatch"
+    assert rec["records_replayed"] == 2 and rec["torn_bytes"] > 0
+    # the survivor keeps working: new appends are durable again
+    t2.append("GATTACA")
+    crash2 = _crash_copy(crash, tmp_path / "crash2")
+    t3 = SuffixTable.open("t", root=crash2)
+    assert np.array_equal(
+        _full_text(t3),
+        np.concatenate([want, np.asarray(codec.encode_dna("GATTACA"),
+                                         np.int64)]))
+
+
+def test_seal_skipped_never_double_applies(tmp_path, monkeypatch):
+    """Crash window between snapshot publish and log truncation: the
+    snapshot already holds the records, so replay must SKIP them by
+    sequence number instead of appending them twice."""
+    base = codec.random_dna(200, seed=5)
+    root = tmp_path / "root"
+    t = SuffixTable.create("t", base, root=str(root), max_query_len=16)
+    acked = [np.asarray(base, np.int64)]
+    for i in range(3):
+        c = codec.random_dna(10, seed=60 + i)
+        t.append(c)
+        acked.append(np.asarray(c, np.int64))
+    monkeypatch.setattr(WriteAheadLog, "seal",
+                        lambda self, start_seq: None)   # crash-the-seal
+    t.minor_compact()                  # persists the run, "fails" to seal
+    for i in range(2):
+        c = codec.random_dna(7, seed=70 + i)
+        t.append(c)
+        acked.append(np.asarray(c, np.int64))
+    monkeypatch.undo()
+    crash = _crash_copy(root, tmp_path / "crash")
+    t2 = SuffixTable.open("t", root=crash)
+    assert np.array_equal(_full_text(t2), np.concatenate(acked))
+    rec = t2.stats()["wal"]["recovery"]
+    assert rec["records_skipped"] == 3 and rec["records_replayed"] == 2
+
+
+def test_sealing_truncates_log_after_snapshot(tmp_path):
+    base = codec.random_dna(300, seed=9)
+    root = tmp_path / "root"
+    t = SuffixTable.create("t", base, root=str(root), max_query_len=16)
+    for i in range(3):
+        t.append(codec.random_dna(20, seed=90 + i))
+    assert os.path.getsize(_wal_path(root)) > HEADER_SIZE
+    t.minor_compact()                       # seal: run persisted first
+    assert os.path.getsize(_wal_path(root)) == HEADER_SIZE
+    t.append(codec.random_dna(5, seed=99))
+    t.flush()                               # flush seals too
+    assert os.path.getsize(_wal_path(root)) == HEADER_SIZE
+    t.append(codec.random_dna(5, seed=100))
+    t.compact()                             # and major compaction
+    assert os.path.getsize(_wal_path(root)) == HEADER_SIZE
+    t2 = SuffixTable.open("t", root=_crash_copy(root, tmp_path / "c"))
+    assert len(t2) == 300 + 3 * 20 + 5 + 5
+
+
+# ---------------------------------------------------------------------------
+# group commit through the client
+# ---------------------------------------------------------------------------
+def _marker(i: int) -> str:
+    """Unique 10-mer: 'AAAA' + 6 base-3 digits over {C,G,T}.  Digits
+    never contain A, so the only 'AAAA' runs in a marker stream sit at
+    marker starts — cross-chunk windows can never fake another marker."""
+    digits = []
+    for _ in range(6):
+        digits.append("CGT"[i % 3])
+        i //= 3
+    return "AAAA" + "".join(digits)
+
+
+def test_group_commit_concurrent_clients_all_acked_durable(tmp_path):
+    root = str(tmp_path / "root")
+    db = Database(root, group_commit_ms=2.0)
+    db.create_table("t", codec.random_dna(400, seed=11), is_dna=True,
+                    max_query_len=16, group_commit_ms=2.0)
+    n_threads, per_thread = 6, 4
+    errs = []
+
+    def writer(tid):
+        try:
+            for j in range(per_thread):
+                db.append("t", _marker(tid * per_thread + j))
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs
+    log = db.table("t").stats()["wal"]["log"]
+    total = n_threads * per_thread
+    assert log["appends"] == total
+    assert log["fsyncs"] <= log["appends"]   # group commit may batch
+    db.close()
+    crash = _crash_copy(root, tmp_path / "crash")
+    t2 = SuffixTable.open("t", root=crash)
+    assert len(t2) == 400 + total * 10
+    counts = t2.count([_marker(i) for i in range(total)])
+    assert (counts >= 1).all(), "an acked concurrent append was lost"
+
+
+# ---------------------------------------------------------------------------
+# opt-out, guards, stats
+# ---------------------------------------------------------------------------
+def test_wal_opt_out_restores_volatile_appends(tmp_path):
+    base = codec.random_dna(300, seed=13)
+    root = str(tmp_path / "root")
+    t = SuffixTable.create("t", base, root=root, wal=False)
+    assert not os.path.exists(_wal_path(root))
+    assert t.stats()["wal"]["enabled"] is False
+    t.append("GATTACA")
+    t2 = SuffixTable.open("t", root=_crash_copy(root, tmp_path / "c"),
+                          wal=False)
+    assert len(t2) == 300                   # documented volatility
+    with pytest.raises(ValueError):
+        SuffixTable.from_codes(base, is_dna=True, wal=True)
+
+
+def test_wal_false_interlude_never_splices_stale_records(tmp_path):
+    """A wal=False open orphans the live log: appends made during the
+    opt-out interlude take sequence numbers the log never saw, so a
+    later wal=True open must NOT replay the stale records into the
+    diverged text."""
+    base = codec.random_dna(300, seed=29)
+    root = str(tmp_path / "root")
+    t = SuffixTable.create("t", base, root=root, max_query_len=16)
+    for i in range(3):                      # logged seqs 1..3, then crash
+        t.append(codec.random_dna(10, seed=40 + i))
+    crash = _crash_copy(root, tmp_path / "crash")
+    t2 = SuffixTable.open("t", root=crash, wal=False)
+    assert not os.path.exists(_wal_path(crash))        # moved aside
+    assert os.path.exists(_wal_path(crash) + ".orphaned")
+    unlogged = [codec.random_dna(5, seed=45 + i) for i in range(2)]
+    for c in unlogged:
+        t2.append(c)
+    t2.flush()                              # snapshot wal_seq now 2
+    t3 = SuffixTable.open("t", root=crash)  # wal back ON
+    want = np.concatenate([np.asarray(base, np.int64)]
+                          + [np.asarray(c, np.int64) for c in unlogged])
+    assert np.array_equal(_full_text(t3), want), \
+        "stale log records spliced into a diverged table"
+    t3.append("ACGT")                       # and the fresh log works
+    t4 = SuffixTable.open(
+        "t", root=_crash_copy(crash, tmp_path / "crash2"))
+    assert len(t4) == want.size + 4
+
+
+def test_oversized_append_rejected_before_logging(tmp_path, monkeypatch):
+    import repro.api.wal as wal_mod
+    t = SuffixTable.create("t", codec.random_dna(200, seed=31),
+                           root=str(tmp_path))
+    monkeypatch.setattr(wal_mod, "_MAX_PAYLOAD", 64)
+    size_before = os.path.getsize(_wal_path(tmp_path))
+    with pytest.raises(ValueError, match="record cap"):
+        t.append(codec.random_dna(200, seed=32))
+    # nothing logged, nothing applied, counter not wedged
+    assert os.path.getsize(_wal_path(tmp_path)) == size_before
+    assert t.memtable.size == 0
+    monkeypatch.undo()
+    t.append("ACGT")                        # table still writable
+    assert len(t) == 204
+
+
+def test_closed_table_refuses_appends_not_durability(tmp_path):
+    t = SuffixTable.create("t", codec.random_dna(200, seed=17),
+                           root=str(tmp_path))
+    t.append("ACGT")
+    t.close()
+    with pytest.raises(RuntimeError):
+        t.append("ACGT")
+    t2 = SuffixTable.open("t", root=str(tmp_path))
+    assert len(t2) == 204
+
+
+def test_wal_stats_schema(tmp_path):
+    t = SuffixTable.create("t", codec.random_dna(200, seed=19),
+                           root=str(tmp_path))
+    t.append("ACGT")
+    w = t.stats()["wal"]
+    assert w["enabled"] is True and w["seq"] == 1
+    assert {"appends", "acked", "fsyncs", "seals",
+            "group_commit_ms", "synced_seq"} <= set(w["log"])
+    assert w["recovery"] is None            # clean create, nothing replayed
+    t2 = SuffixTable.open("t", root=str(tmp_path))
+    rec = t2.stats()["wal"]["recovery"]
+    assert {"segment_start_seq", "records_scanned", "records_replayed",
+            "records_skipped", "valid_bytes", "torn_bytes",
+            "reason"} == set(rec)
+
+
+def test_replay_respects_memtable_limit_after_recovery(tmp_path):
+    """Replay defers auto-seal to the end, then honors memtable_limit —
+    the recovered table persists a run and truncates the log exactly as
+    a live table would have."""
+    root = str(tmp_path / "root")
+    t = SuffixTable.create("t", codec.random_dna(300, seed=23), root=root,
+                           max_query_len=16)
+    for i in range(4):
+        t.append(codec.random_dna(30, seed=30 + i))
+    crash = _crash_copy(root, tmp_path / "crash")
+    t2 = SuffixTable.open("t", root=crash, memtable_limit=100)
+    assert t2.memtable.size == 0 and len(t2.runs) == 1
+    assert len(t2) == 300 + 120
+    assert os.path.getsize(_wal_path(crash)) == HEADER_SIZE
+    # and the post-recovery seal state itself survives another crash
+    t3 = SuffixTable.open("t", root=_crash_copy(crash, tmp_path / "c2"),
+                          memtable_limit=100)
+    assert len(t3) == 420

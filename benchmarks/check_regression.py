@@ -7,7 +7,9 @@ This gate makes it regression-checked:
 
 * **throughput metrics** (``*_per_s``, ``*speedup*``, ``*_rate``) must
   not fall more than ``--threshold`` (default 25%) below the baseline;
-* **overhead ratios** (``*overhead*``) must not rise more than the
+* **overhead ratios** (``*overhead*``, ``*_over_*`` like
+  ``read_with_runs_over_base_x``) and the low-load latency target
+  (``coalesced_low_load_p50_ms``) must not rise more than the
   threshold above it;
 * **boolean exactness flags** (``bit_identical``, ``exact_*``,
   ``recovered_all_acked``) that are true in the baseline must stay true
@@ -61,7 +63,7 @@ def classify(name: str, value) -> str:
         return "flag"
     if not isinstance(value, (int, float)):
         return "info"
-    if "overhead" in n:
+    if "overhead" in n or "_over_" in n or "low_load_p50" in n:
         return "lower"
     if (n.endswith("_per_s") or n.endswith("_per_sec")
             or "queries_per_s" in n or "speedup" in n

@@ -225,6 +225,7 @@ class SchedulerStats:
     max_batch_patterns: int = 0   # largest coalesced pattern batch seen
     deadline_expired: int = 0
     errors: int = 0
+    fast_path_queries: int = 0    # ran inline, bypassing the window
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -253,16 +254,44 @@ class QueryScheduler:
     (submissions racing the drain), it just never waits for more.  The
     worker thread starts lazily on the first :meth:`submit` and exits on
     :meth:`close` after draining the queue.
+
+    **Adaptive window** (``adaptive=True``, the default): ``window_ms``
+    becomes a CEILING, not a constant price.  The scheduler keeps an
+    EWMA of observed inter-arrival gaps and
+
+    * under LOW load (average gap >= ``fastpath_gap_ms``, i.e. waiting
+      would not find a peer to coalesce with) a submit with an idle
+      queue executes INLINE on the caller thread — no window, no worker
+      hop (``stats.fast_path_queries``);
+    * otherwise the drain closes once the queue has been quiet for
+      ``~2x`` the average gap (capped at ``window_ms``) instead of
+      sleeping out the rest of the window — a lone straggler stops
+      paying the full window for peers that never arrive, while a
+      saturating caller population (gap << window) still fills whole
+      waves and keeps the coalesced-throughput win.
+
+    ``adaptive=False`` restores the fixed-window behavior exactly.
     """
 
     def __init__(self, resolve_table, *, window_ms: float = 2.0,
-                 max_batch: int = 1024):
+                 max_batch: int = 1024, adaptive: bool = True,
+                 fastpath_gap_ms: Optional[float] = None):
         if window_ms < 0 or max_batch < 1:
             raise ValueError(f"need window_ms >= 0 and max_batch >= 1, got "
                              f"window_ms={window_ms} max_batch={max_batch}")
         self._resolve = resolve_table          # name -> SuffixTable
         self.window_ms = float(window_ms)
         self.max_batch = int(max_batch)
+        self.adaptive = bool(adaptive)
+        # gap above which a query would (on average) close its window
+        # alone — waiting buys nothing, so the fast path takes over
+        self.fastpath_gap_ms = (max(self.window_ms, 0.5)
+                                if fastpath_gap_ms is None
+                                else float(fastpath_gap_ms))
+        self._ewma_gap_ms: Optional[float] = None   # arrival-gap EWMA
+        self._last_arrival: Optional[float] = None
+        self._window_current_ms = self.window_ms    # exported in stats
+        self._busy = 0                 # waves executing right now
         self.stats = SchedulerStats()
         self._cv = threading.Condition()
         # one lock PER TABLE OBJECT serializes that table's scans and
@@ -278,26 +307,82 @@ class QueryScheduler:
         self._thread: Optional[threading.Thread] = None
         self._closed = False
 
+    # -- adaptive window ------------------------------------------------------
+    def _note_arrival(self, now: float) -> None:
+        """Fold one submit into the arrival-gap EWMA and refresh the
+        current window size (call with ``_cv`` held)."""
+        if self._last_arrival is not None:
+            gap_ms = (now - self._last_arrival) * 1e3
+            a = 0.25
+            self._ewma_gap_ms = (gap_ms if self._ewma_gap_ms is None
+                                 else (1 - a) * self._ewma_gap_ms + a * gap_ms)
+        self._last_arrival = now
+        if not self.adaptive:
+            return
+        if self._ewma_gap_ms is None:
+            self._window_current_ms = self.window_ms
+        elif self._ewma_gap_ms >= self.fastpath_gap_ms:
+            self._window_current_ms = 0.0      # low load: don't wait at all
+        else:
+            # quiet for ~2 average gaps => nobody else is coming.  Floored
+            # at 0.5 ms: saturated submitters (gap ~ microseconds) stall
+            # for that long on GC/GIL hiccups, and closing the window on
+            # one would split the wave into fragment batches — each a
+            # fresh bucket shape, i.e. a pointless recompile.
+            self._window_current_ms = min(self.window_ms,
+                                          max(0.5, 2.0 * self._ewma_gap_ms))
+
+    def _fast_path_ok(self) -> bool:
+        """Inline execution beats windowing: queue idle, nothing mid-
+        drain, and arrivals too sparse for coalescing to find a peer
+        (call with ``_cv`` held)."""
+        return (self.adaptive and not self._pending and self._busy == 0
+                and (self._ewma_gap_ms is None
+                     or self._ewma_gap_ms >= self.fastpath_gap_ms))
+
     # -- async path ----------------------------------------------------------
     def submit(self, query: Query) -> QueryFuture:
-        """Enqueue for the current coalesce window; returns a future."""
+        """Enqueue for the current coalesce window; returns a future.
+        Under adaptive low load the query instead executes inline on the
+        calling thread (the window would buy nothing) — the future is
+        already resolved when it returns."""
         fut = QueryFuture()
+        now = time.perf_counter()
+        pend = _Pending(query, fut, now)
         with self._cv:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
-            self._pending.append(_Pending(query, fut, time.perf_counter()))
             self.stats.submitted += 1
-            if self._thread is None:
-                self._thread = threading.Thread(
-                    target=self._loop, name="query-scheduler", daemon=True)
-                self._thread.start()
-            self._cv.notify_all()
+            self._note_arrival(now)
+            if self._fast_path_ok():
+                self.stats.fast_path_queries += 1
+                self._busy += 1
+                inline = True
+            else:
+                inline = False
+                self._pending.append(pend)
+                if self._thread is None:
+                    self._thread = threading.Thread(
+                        target=self._loop, name="query-scheduler",
+                        daemon=True)
+                    self._thread.start()
+                self._cv.notify_all()
+        if inline:
+            try:
+                self._execute([pend])
+            finally:
+                with self._cv:
+                    self._busy -= 1
+                    self._cv.notify_all()
         return fut
 
     def _deadline_of(self, wave_open: float) -> float:
-        """Absolute drain time: window close, capped by the earliest
+        """Absolute drain time: window close (adaptive: or the queue
+        going quiet for the current window), capped by the earliest
         per-query deadline among pending queries."""
         t = wave_open + self.window_ms / 1e3
+        if self.adaptive and self._last_arrival is not None:
+            t = min(t, self._last_arrival + self._window_current_ms / 1e3)
         for p in self._pending:
             if p.query.deadline_ms is not None:
                 t = min(t, p.t_submit + p.query.deadline_ms / 1e3)
@@ -320,7 +405,13 @@ class QueryScheduler:
                     self._cv.wait(timeout=left)
                 wave = self._pending[:self.max_batch]
                 del self._pending[:len(wave)]
-            self._execute(wave)
+                self._busy += 1
+            try:
+                self._execute(wave)
+            finally:
+                with self._cv:
+                    self._busy -= 1
+                    self._cv.notify_all()
 
     def _lock_for(self, table) -> threading.Lock:
         with self._cv:
@@ -358,8 +449,25 @@ class QueryScheduler:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
             self.stats.submitted += len(wave)
-        self._execute(wave)
+            self._busy += 1
+        try:
+            self._execute(wave)
+        finally:
+            with self._cv:
+                self._busy -= 1
+                self._cv.notify_all()
         return [p.future.result(timeout=0) for p in wave]
+
+    def stats_snapshot(self) -> dict:
+        """``SchedulerStats.as_dict()`` plus the adaptive window's live
+        state: ``window_ms_current`` (what the next drain will wait) and
+        ``ewma_gap_ms`` (the smoothed inter-arrival gap, ``None`` before
+        two submits) — schema in docs/client_api.md."""
+        with self._cv:
+            d = self.stats.as_dict()
+            d["window_ms_current"] = self._window_current_ms
+            d["ewma_gap_ms"] = self._ewma_gap_ms
+        return d
 
     # -- execution core ------------------------------------------------------
     def _execute(self, wave: list[_Pending]) -> None:
@@ -583,6 +691,8 @@ class Database:
 
     def __init__(self, root: Optional[str] = None, *,
                  coalesce_window_ms: float = 2.0, max_batch: int = 1024,
+                 adaptive_window: bool = True,
+                 fastpath_gap_ms: Optional[float] = None,
                  **open_kw):
         self.catalog = Catalog(root) if root is not None else None
         self._open_kw = dict(open_kw)
@@ -590,7 +700,8 @@ class Database:
         self._owned: set[str] = set()       # opened/created by this handle
         self._open_lock = threading.Lock()
         self.scheduler = QueryScheduler(
-            self.table, window_ms=coalesce_window_ms, max_batch=max_batch)
+            self.table, window_ms=coalesce_window_ms, max_batch=max_batch,
+            adaptive=adaptive_window, fastpath_gap_ms=fastpath_gap_ms)
 
     @classmethod
     def in_memory(cls, **kw) -> "Database":
@@ -735,7 +846,7 @@ class Database:
     def stats(self) -> dict:
         """``{"scheduler": ..., "tables": {name: table.stats()}}`` for
         every table this handle has touched (schema: docs/client_api.md)."""
-        return {"scheduler": self.scheduler.stats.as_dict(),
+        return {"scheduler": self.scheduler.stats_snapshot(),
                 "tables": {name: t.stats()
                            for name, t in sorted(self._tables.items())}}
 

@@ -47,7 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import query as Q
-from repro.core.tablet import TabletStore, build_tablet_store
+from repro.core.tablet import (TabletStore, TierStack, build_tablet_store,
+                               stack_tier_stores)
 
 # One jitted query shared by every run and memtable generation: jax.jit
 # caches per (store shape/meta, batch shape), so equally-sized runs and
@@ -216,3 +217,95 @@ class Run:
                                    offset=self.start - self.overlap,
                                    lo=self.start, hi=self.end,
                                    n_real=n_real)
+
+
+class TierSet:
+    """All delta tiers of a table as ONE stacked device view plus the
+    host-side suffix arrays needed to enumerate matches.
+
+    The old read path dispatched one jitted query per run plus one for
+    the memtable, then ran a per-query Python loop per tier to apply the
+    straddle bounds (~9x base-only latency with runs live,
+    BENCH_compaction.json).  A TierSet feeds the whole set to the fused
+    tier scan (:mod:`repro.kernels.tier_scan`) in a single launch; the
+    bounds live in the trace, and the host only slices already-located
+    SA runs when positions are actually enumerated.
+
+    Instances are immutable snapshots: ``SuffixTable`` rebuilds its
+    cached TierSet whenever the tier population changes (append, seal,
+    compaction, restore), exactly where it already invalidated the
+    per-tier caches.  Tier order is runs (oldest first) then memtable —
+    same order the old fan-out scanned, so enumeration output matches
+    bit for bit.
+    """
+
+    def __init__(self, stores, offsets, bounds, kinds):
+        self.stack: TierStack = stack_tier_stores(
+            stores, offsets=offsets, bounds=bounds)
+        R = self.stack.rows
+        self.sa_host = np.zeros((len(stores), R), np.int64)
+        for t, s in enumerate(stores):
+            self.sa_host[t, :s.n_pad] = np.asarray(s.sa)
+        self.offsets = np.asarray(offsets, np.int64)
+        self.los = np.asarray([b[0] for b in bounds], np.int64)
+        self.his = np.asarray([b[1] for b in bounds], np.int64)
+        self.kinds = tuple(kinds)
+        self.num_tiers = len(stores)
+
+    @classmethod
+    def build(cls, runs, memtable) -> Optional["TierSet"]:
+        """Snapshot the live tiers (non-empty runs, then the memtable if
+        it has appends).  Returns None when there are no delta tiers —
+        the caller dispatches base-only."""
+        stores, offsets, bounds, kinds = [], [], [], []
+        for r in runs:
+            if r.length == 0:
+                continue
+            stores.append(r._ensure_store())
+            offsets.append(r.start - r.overlap)
+            bounds.append((r.start, r.end))
+            kinds.append("run")
+        if memtable is not None and memtable.size > 0:
+            stores.append(memtable._ensure_store())
+            offsets.append(memtable.n_base - memtable.overlap)
+            bounds.append((memtable.n_base,
+                           memtable.n_base + memtable.size))
+            kinds.append("memtable")
+        if not stores:
+            return None
+        return cls(stores, offsets, bounds, kinds)
+
+    def delta_positions(self, tless, tmatch, plen,
+                        n_real: Optional[int] = None) -> list[np.ndarray]:
+        """Per query, the ascending GLOBAL positions owned by any delta
+        tier, assembled from the fused scan's ``less``/``matches``
+        outputs ((T, B) int32) — pure host slicing, no further device
+        dispatch.  ``n_real`` trims trailing shape-bucketing pad
+        queries."""
+        tless = np.asarray(tless)
+        tmatch = np.asarray(tmatch)
+        plen_np = np.asarray(plen)
+        B = int(plen_np.shape[0])
+        if n_real is not None:
+            B = min(B, int(n_real))
+        empty = np.zeros((0,), np.int64)
+        out = []
+        for i in range(B):
+            parts = []
+            for t in range(self.num_tiers):
+                m = int(tmatch[t, i])
+                if m <= 0:
+                    continue
+                lb = int(tless[t, i])
+                g = self.sa_host[t, lb:lb + m] + self.offsets[t]
+                e = g + int(plen_np[i])
+                g = g[(e > self.los[t]) & (e <= self.his[t])]
+                if g.size:
+                    parts.append(g)
+            if not parts:
+                out.append(empty)
+                continue
+            g = np.concatenate(parts)
+            g.sort()
+            out.append(g)
+        return out

@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.api.compaction import merge_delta_sa
 from repro.api.memtable import Memtable
-from repro.api.runs import Run, logical_tail
+from repro.api.runs import Run, TierSet, logical_tail
 from repro.api.wal import WriteAheadLog
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import codec
@@ -153,6 +153,10 @@ class SuffixTable:
                                    else bool(distributed_build))
         self.memtable = Memtable(self._codes, is_dna=self.is_dna,
                                  max_query_len=self.max_query_len)
+        # cached TierSet snapshot for the fused read path; rebuilt lazily
+        # after any write changes the tier population (docs/read_path.md)
+        self._tiers: Optional[TierSet] = None
+        self._tiers_valid = False
         self._cache = TopKCache(cache_size)
         self._manager: Optional[CheckpointManager] = None
         if self.root is not None and self.name is not None:
@@ -354,7 +358,9 @@ class SuffixTable:
         * ``planner`` — ``PlannerStats.as_dict()``: batches, queries,
           mode counts, retry counters, and the bucketed-batch slot
           accounting (``bucketed_batches`` / ``bucketed_queries`` /
-          ``pad_slots``) fed by the client frontend.  (True cross-caller
+          ``pad_slots``) fed by the client frontend, plus the fused
+          read-path counters ``fused_batches`` / ``base_only_batches``
+          / ``tier_reads`` (docs/read_path.md).  (True cross-caller
           coalescing counters live in ``Database.stats()["scheduler"]``.)
         * ``wal`` — durability: ``enabled``, ``seq`` (last append's
           commit sequence), ``log`` (appends/fsyncs/seals counters, or
@@ -398,6 +404,8 @@ class SuffixTable:
         planner's own cache was left stale across table writes)."""
         self._cache.bump()
         self.planner.invalidate_cache()
+        self._tiers = None
+        self._tiers_valid = False
 
     def clear_cache(self) -> None:
         """Drop all cached string-scan results (benchmarks use this to
@@ -411,6 +419,8 @@ class SuffixTable:
         if not self.runs:
             self.memtable = Memtable(self._codes, is_dna=self.is_dna,
                                      max_query_len=self.max_query_len)
+            self._tiers = None
+            self._tiers_valid = False
             return
         n = self.n_logical
         tail = logical_tail([self._codes] + [r.codes for r in self.runs],
@@ -418,6 +428,8 @@ class SuffixTable:
         self.memtable = Memtable(tail.astype(self._codes.dtype, copy=False),
                                  is_dna=self.is_dna,
                                  max_query_len=self.max_query_len, n_base=n)
+        self._tiers = None
+        self._tiers_valid = False
 
     def _sa(self) -> np.ndarray:
         # the planner already caches a host copy of the same store.sa —
@@ -425,90 +437,83 @@ class SuffixTable:
         return self.planner._sa()
 
     # -- read path -----------------------------------------------------------
-    def _delta_positions(self, patt, plen,
-                         n_real: Optional[int] = None) -> list[np.ndarray]:
-        """Fan a query batch out over the delta tiers (sealed runs, then
-        the memtable) and merge: per query, the ascending global start
-        positions of every occurrence the base index cannot see.  Each
-        occurrence ends in exactly one tier, so concatenation never
-        double-counts; straddles make per-tier ranges overlap, hence the
-        sort.  ``n_real`` marks trailing shape-bucketing pad rows: they
-        ride the jitted tier queries but skip the host-side merge, and
-        only ``n_real`` lists come back."""
-        plen_np = np.asarray(plen)
-        B = int(plen_np.shape[0])
-        if n_real is not None:
-            B = min(B, int(n_real))
-        empty = np.zeros((0,), np.int64)
-        tiers = [r for r in self.runs if r.length]
-        if self.memtable.size:
-            tiers.append(self.memtable)
-        if not tiers or B == 0:
-            return [empty] * B
-        per_tier = [t.match_positions(patt, plen, n_real=n_real)
-                    for t in tiers]
-        out = []
-        for i in range(B):
-            gs = [p[i] for p in per_tier if p[i].size]
-            if not gs:
-                out.append(empty)
-            elif len(gs) == 1:
-                out.append(gs[0])
-            else:
-                g = np.concatenate(gs)
-                g.sort()
-                out.append(g)
+    def _tierset(self) -> Optional[TierSet]:
+        """The cached delta-tier snapshot for the fused read path — None
+        when there are no delta tiers (the base-only fast path).
+        Rebuilt lazily after any write that changes the tier population
+        (append / seal / compaction / restore all invalidate it)."""
+        if not self._tiers_valid:
+            self._tiers = TierSet.build(self.runs, self.memtable)
+            self._tiers_valid = True
+        return self._tiers
+
+    def _scan_tiers(self, patt, plen, *, mode=None, n_real=None):
+        """One fused merged dispatch: (merged MatchResult, TierScanResult
+        | None, delta positions per query | None, base-only count)."""
+        merged, tres = self.planner.scan_tiers(
+            self._tierset(), patt, plen, mode=mode, n_real=n_real)
+        B = int(np.asarray(plen).shape[0]) if n_real is None else int(n_real)
+        count = np.asarray(merged.count).astype(np.int64)[:B]
+        if tres is None:
+            return merged, None, None, count
+        delta = self._tiers.delta_positions(tres.less, tres.matches,
+                                            plen, n_real=B)
+        base_count = count - np.asarray(
+            tres.count)[:, :B].astype(np.int64).sum(axis=0)
+        return merged, tres, delta, base_count
+
+    def _base_min_positions(self, base_count, base_rank) -> np.ndarray:
+        """Per query, the smallest BASE text position among its base-tier
+        matches (-1 when none): one vectorized flat gather + segmented
+        min over the SA slices ``[lb, lb + count)`` — the text-order
+        ``first_pos`` reduction, with no per-query dispatch."""
+        B = int(base_count.shape[0])
+        out = np.full(B, -1, np.int64)
+        nz = np.flatnonzero((base_count > 0) & (base_rank >= 0))
+        if nz.size == 0:
+            return out
+        sa = self._sa()
+        cnt = base_count[nz].astype(np.int64)
+        starts = self.store.pad_count + base_rank[nz].astype(np.int64)
+        seg = np.concatenate([[0], np.cumsum(cnt)[:-1]])
+        flat = np.repeat(starts - seg, cnt) + np.arange(int(cnt.sum()))
+        out[nz] = np.minimum.reduceat(sa[flat].astype(np.int64), seg)
         return out
 
     def scan_encoded(self, patt, plen, *, mode: Optional[str] = None
                      ) -> MatchResult:
         """Exact merged scan of an encoded batch (see ``ScanPlanner.
         scan_encoded`` for encodings).  With no runs and an empty memtable
-        this is a pure delegation; otherwise ``count`` adds the run/
-        memtable-only occurrences and ``first_pos`` is the smallest of the
-        base's reported position and every delta-tier occurrence position.
-        ``first_rank`` always refers to the BASE suffix array (−1 when the
-        only matches are in the delta tiers) — do not feed a merged result
-        to ``planner.positions_from_result``, use :meth:`scan`/
-        :meth:`locate` for merged enumeration."""
-        base = self.planner.scan_encoded(patt, plen, mode=mode)
-        if not self.runs and self.memtable.size == 0:
-            return base
-        extra = self._delta_positions(patt, plen)
-        count = np.asarray(base.count).astype(np.int64)
-        first_pos = np.asarray(base.first_pos).astype(np.int64)
-        for i, g in enumerate(extra):
-            if g.size:
-                count[i] += g.size
-                first_pos[i] = (int(g[0]) if first_pos[i] < 0
-                                else min(int(first_pos[i]), int(g[0])))
-        found = count > 0
-        return MatchResult(found=jnp.asarray(found),
-                           count=jnp.asarray(count),
-                           first_rank=base.first_rank,
-                           first_pos=jnp.asarray(first_pos))
+        this is a pure base delegation; otherwise the fused tier scan
+        (``ScanPlanner.scan_tiers``) adds the run/memtable-only
+        occurrences in the same launch and ``first_pos`` is the smallest
+        of the base's reported position and every delta-tier occurrence
+        position.  ``first_rank`` always refers to the BASE suffix array
+        (−1 when the only matches are in the delta tiers) — do not feed a
+        merged result to ``planner.positions_from_result``, use
+        :meth:`scan`/:meth:`locate` for merged enumeration."""
+        merged, _tres = self.planner.scan_tiers(self._tierset(), patt,
+                                                plen, mode=mode)
+        return merged
 
-    def _all_positions(self, base_count, base_rank, extra, i
-                       ) -> tuple[int, np.ndarray, np.ndarray]:
-        """Row ``i`` of a merged scan: (count, base SA slice, delta
-        positions) — the complete occurrence set split by tier."""
-        run = np.zeros((0,), np.int64)
+    def _base_slice(self, base_count, base_rank, i) -> np.ndarray:
+        """Base-tier SA slice of row ``i``'s matches (text positions,
+        unsorted — suffix-rank order)."""
         cb = int(base_count[i])
-        if cb > 0 and base_rank[i] >= 0:
-            lb = self.store.pad_count + int(base_rank[i])
-            run = self._sa()[lb:lb + cb].astype(np.int64)
-        g = extra[i]
-        return cb + int(g.size), run, g
+        if cb <= 0 or base_rank[i] < 0:
+            return np.zeros((0,), np.int64)
+        lb = self.store.pad_count + int(base_rank[i])
+        return self._sa()[lb:lb + cb].astype(np.int64)
 
     def scan_batch(self, patt, plen, top_k: int = 0) -> ScanOutcome:
         """Merged scan of an encoded batch with **text-order** semantics
         — the client frontend's batch entry point (no string cache).
 
         The batch is padded to a power-of-two bucket (row 0 repeated)
-        before the jitted base scan and the delta-tier fan-out, so
-        coalesced batches of varying size reuse O(log B) compilations
-        instead of one per size; pad slots are discarded here and
-        attributed to ``planner.stats.pad_slots`` (slot accounting under
+        before the fused merged dispatch, so coalesced batches of varying
+        size reuse O(log B) compilations instead of one per size; pad
+        slots are discarded here and attributed to
+        ``planner.stats.pad_slots`` (slot accounting under
         ``bucketed_batches``), never to ``queries``.
         """
         plen_np = np.asarray(plen)
@@ -527,22 +532,18 @@ class SuffixTable:
                 [patt_np, np.repeat(patt_np[:1], reps, axis=0)])
             plen_np = np.concatenate(
                 [plen_np, np.repeat(plen_np[:1], reps)])
-        base = self.planner.scan_encoded(jnp.asarray(patt_np),
-                                         jnp.asarray(plen_np), n_real=B)
-        extra = self._delta_positions(patt_np, plen_np, n_real=B)
-        count = np.zeros(B, np.int64)
-        first_pos = np.full(B, -1, np.int64)
+        merged, _tres, delta, base_count = self._scan_tiers(
+            jnp.asarray(patt_np), jnp.asarray(plen_np), n_real=B)
+        count = np.asarray(merged.count).astype(np.int64)[:B]
+        base_rank = np.asarray(merged.first_rank)[:B]
+        first_pos = self._base_min_positions(base_count, base_rank)
         positions = (np.full((B, top_k), -1, np.int64) if top_k else None)
-        base_count = np.asarray(base.count).astype(np.int64)
-        base_rank = np.asarray(base.first_rank)
         for i in range(B):
-            count[i], run, g = self._all_positions(base_count, base_rank,
-                                                   extra, i)
-            firsts = ([int(run.min())] if run.size else []) + \
-                ([int(g[0])] if g.size else [])
-            if firsts:
-                first_pos[i] = min(firsts)
+            g = delta[i] if delta is not None else np.zeros((0,), np.int64)
+            if g.size and (first_pos[i] < 0 or g[0] < first_pos[i]):
+                first_pos[i] = int(g[0])
             if top_k:
+                run = self._base_slice(base_count, base_rank, i)
                 cand = np.concatenate([run, g])
                 if cand.size > top_k:
                     cand = np.partition(cand, top_k - 1)[:top_k]
@@ -605,11 +606,10 @@ class SuffixTable:
         if limit is not None and limit <= 0:
             raise ValueError(f"limit must be positive, got {limit}")
         patt, plen = self.planner.encode([pattern])
-        base = self.planner.scan_encoded(patt, plen, n_real=1)
-        extra = self._delta_positions(patt, plen)
-        _, run, g = self._all_positions(
-            np.asarray(base.count).astype(np.int64),
-            np.asarray(base.first_rank), extra, 0)
+        merged, _tres, delta, base_count = self._scan_tiers(patt, plen,
+                                                            n_real=1)
+        run = self._base_slice(base_count, np.asarray(merged.first_rank), 0)
+        g = delta[0] if delta is not None else np.zeros((0,), np.int64)
         cand = np.concatenate([run, g]) if g.size else run
         cand = cand[cand > after]
         if limit is not None and cand.size > limit:

@@ -65,6 +65,22 @@ def pack_2bit(codes) -> jnp.ndarray:
     return jnp.bitwise_or.reduce(lanes << shifts[None, :], axis=1)
 
 
+def pack_2bit_batch(codes: np.ndarray) -> np.ndarray:
+    """Batched host-side pack: (B, L) uint8/int codes {0..3} -> (B, W)
+    uint32 words, same bit layout as :func:`pack_2bit`.  Pure numpy —
+    encoding a query batch must not pay one jnp dispatch per pattern."""
+    codes = np.asarray(codes)
+    B, L = codes.shape
+    n_words = packed_length(L)
+    pad = n_words * BASES_PER_WORD - L
+    if pad:
+        codes = np.pad(codes, ((0, 0), (0, pad)))
+    lanes = codes.astype(np.uint32).reshape(B, n_words, BASES_PER_WORD)
+    shifts = (30 - 2 * np.arange(BASES_PER_WORD)).astype(np.uint32)
+    return np.bitwise_or.reduce(
+        (lanes << shifts[None, None, :]).astype(np.uint32), axis=2)
+
+
 def unpack_2bit(words: jnp.ndarray, n_bases: int) -> jnp.ndarray:
     """Inverse of pack_2bit."""
     words = jnp.asarray(words, dtype=jnp.uint32)

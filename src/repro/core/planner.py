@@ -93,11 +93,36 @@ class PlannerStats:
     mode_counts: dict = dataclasses.field(
         default_factory=lambda: {MODE_SINGLE: 0, MODE_BROADCAST: 0,
                                  MODE_ROUTED: 0})
+    # fused read-path counters (docs/read_path.md): ``fused_batches``
+    # crossed the device boundary ONCE for base + all delta tiers;
+    # ``base_only_batches`` took the no-delta fast path.  ``tier_reads``
+    # counts logical tier visits per kind — under the old fan-out each
+    # visit was its own dispatch, so (runs + memtable) / fused_batches
+    # is the dispatch count a batch no longer pays.
+    fused_batches: int = 0
+    base_only_batches: int = 0
+    tier_reads: dict = dataclasses.field(
+        default_factory=lambda: {"base": 0, "runs": 0, "memtable": 0})
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["mode_counts"] = dict(self.mode_counts)
+        d["tier_reads"] = dict(self.tier_reads)
         return d
+
+
+@dataclasses.dataclass(frozen=True)
+class TierScanResult:
+    """The fused tier scan's per-tier outputs ((T, B) int32 each; tier
+    order = the TierSet's).  ``less``/``matches`` delimit each tier's
+    raw prefix-match run in its own suffix array — enough for the table
+    to enumerate owned positions by pure host slicing.  Fields are
+    still-async device handles; count-only callers never force the
+    sync, enumeration converts with ``np.asarray`` when it slices."""
+    count: "np.ndarray"    # occurrences the tier owns (bounds applied)
+    less: "np.ndarray"     # rows strictly before the pattern (slice lb)
+    matches: "np.ndarray"  # raw prefix-match run length (no bounds)
+    first_g: "np.ndarray"  # min owned global position (2**30 if none)
 
 
 class TopKCache:
@@ -365,6 +390,31 @@ class ScanPlanner:
         return MODE_SINGLE if self.num_tablets <= 1 else MODE_BROADCAST
 
     # -- encoded-batch API --------------------------------------------------
+    def _check_plen(self, plen, B: int,
+                    n_real: Optional[int] = None) -> None:
+        if n_real is not None and not 0 <= n_real <= B:
+            raise ValueError(f"n_real={n_real} out of range for batch {B}")
+        if B:
+            max_plen = int(np.max(np.asarray(plen)))
+            if max_plen > self.max_pattern_len:
+                raise ValueError(
+                    f"pattern length {max_plen} exceeds max_pattern_len="
+                    f"{self.max_pattern_len}; compares are depth-capped, so "
+                    f"longer patterns would be silently truncated — rebuild "
+                    f"the store with a larger max_query_len")
+
+    def _account(self, chosen: str, B: int,
+                 n_real: Optional[int]) -> None:
+        self.stats.batches += 1
+        if n_real is None:
+            self.stats.queries += B
+        else:
+            self.stats.queries += n_real
+            self.stats.bucketed_batches += 1
+            self.stats.bucketed_queries += n_real
+            self.stats.pad_slots += B - n_real
+        self.stats.mode_counts[chosen] += 1
+
     def scan_encoded(self, patt, plen, *, mode: Optional[str] = None,
                      retry: bool = True,
                      n_real: Optional[int] = None) -> MatchResult:
@@ -383,16 +433,7 @@ class ScanPlanner:
         run, which is the point of bucketing.
         """
         B = int(patt.shape[0])
-        if n_real is not None and not 0 <= n_real <= B:
-            raise ValueError(f"n_real={n_real} out of range for batch {B}")
-        if B:
-            max_plen = int(np.max(np.asarray(plen)))
-            if max_plen > self.max_pattern_len:
-                raise ValueError(
-                    f"pattern length {max_plen} exceeds max_pattern_len="
-                    f"{self.max_pattern_len}; compares are depth-capped, so "
-                    f"longer patterns would be silently truncated — rebuild "
-                    f"the store with a larger max_query_len")
+        self._check_plen(plen, B, n_real)
         chosen = mode or self.plan(B).mode
         if chosen not in (MODE_SINGLE, MODE_BROADCAST, MODE_ROUTED):
             raise ValueError(f"unknown scan mode {chosen!r}")
@@ -400,15 +441,8 @@ class ScanPlanner:
                 and chosen not in self._executors):  # injected fakes are ok
             raise ValueError(
                 f"mode {chosen!r} requires a mesh; this planner has none")
-        self.stats.batches += 1
-        if n_real is None:
-            self.stats.queries += B
-        else:
-            self.stats.queries += n_real
-            self.stats.bucketed_batches += 1
-            self.stats.bucketed_queries += n_real
-            self.stats.pad_slots += B - n_real
-        self.stats.mode_counts[chosen] += 1
+        self._account(chosen, B, n_real)
+        self.stats.tier_reads["base"] += 1
         if B == 0:
             z = jnp.zeros((0,), jnp.int32)
             return MatchResult(found=z.astype(bool), count=z,
@@ -451,6 +485,65 @@ class ScanPlanner:
         return MatchResult(found=jnp.asarray(found), count=jnp.asarray(count),
                            first_rank=jnp.asarray(first_rank),
                            first_pos=jnp.asarray(first_pos))
+
+    # -- fused multi-tier scan ----------------------------------------------
+    def scan_tiers(self, tierset, patt, plen, *,
+                   mode: Optional[str] = None, retry: bool = True,
+                   n_real: Optional[int] = None
+                   ) -> tuple[MatchResult, Optional[TierScanResult]]:
+        """Merged read over base + every delta tier of ``tierset`` (a
+        ``repro.api.runs.TierSet`` or None).  Returns the MERGED
+        MatchResult — exact total counts, text-minimum ``first_pos``,
+        base-only ``first_rank`` (docs/table_api.md) — plus the per-tier
+        :class:`TierScanResult` for enumeration (None when the base-only
+        fast path ran).
+
+        Single-device batches fuse end to end: base binary search, all
+        tier scans, straddle masks, and the merge ride ONE jitted launch
+        (``kernels.ops.fused_single``).  Mesh batches keep their exact
+        sharded base dispatch — with its sentinel retries — and add one
+        fused launch for all delta tiers.  Either way a batch crosses
+        the layer boundary once, not once per tier.
+        """
+        B = int(patt.shape[0])
+        if tierset is None or tierset.num_tiers == 0 or B == 0:
+            res = self.scan_encoded(patt, plen, mode=mode, retry=retry,
+                                    n_real=n_real)
+            self.stats.base_only_batches += 1
+            return res, None
+        self._check_plen(plen, B, n_real)
+        n_runs = sum(1 for k in tierset.kinds if k == "run")
+        chosen = mode or self.plan(B).mode
+        from repro.kernels import ops
+
+        if chosen == MODE_SINGLE:
+            self._account(chosen, B, n_real)
+            self.stats.tier_reads["base"] += 1
+            merged, _base, tiers = ops.fused_single(
+                self.store, tierset.stack, patt, plen)
+        else:
+            # mesh base scan keeps its own dispatch (and sentinel
+            # retries); scan_encoded does the accounting for it
+            base = self.scan_encoded(patt, plen, mode=chosen, retry=retry,
+                                     n_real=n_real)
+            tiers = ops.fused_tiers(tierset.stack, patt, plen)
+            from repro.kernels.tier_scan import merge_tier_results
+            merged = merge_tier_results(
+                MatchResult(found=jnp.asarray(base.found),
+                            count=jnp.asarray(base.count, jnp.int32),
+                            first_rank=jnp.asarray(base.first_rank,
+                                                   jnp.int32),
+                            first_pos=jnp.asarray(base.first_pos,
+                                                  jnp.int32)),
+                tiers[0], tiers[3])
+        self.stats.fused_batches += 1
+        self.stats.tier_reads["runs"] += n_runs
+        self.stats.tier_reads["memtable"] += tierset.num_tiers - n_runs
+        # handles stay on device: the count-only path (scan_encoded)
+        # never pays the host sync; enumeration converts lazily
+        tres = TierScanResult(count=tiers[0], less=tiers[1],
+                              matches=tiers[2], first_g=tiers[3])
+        return merged, tres
 
     # -- match enumeration --------------------------------------------------
     def _sa(self) -> np.ndarray:

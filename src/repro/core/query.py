@@ -67,7 +67,7 @@ def encode_patterns(patterns: list[str], max_len: int):
     codes = np.zeros((B, max_len), np.int32)
     for i, p in enumerate(patterns):
         codes[i, : len(p)] = codec.encode_dna(p)
-    packed = np.stack([np.asarray(codec.pack_2bit(c)) for c in codes])
+    packed = codec.pack_2bit_batch(codes)
     return jnp.asarray(codes), jnp.asarray(packed[:, :W]), jnp.asarray(lengths)
 
 
@@ -96,13 +96,13 @@ def _word_masks(plen: jnp.ndarray, n_words: int) -> jnp.ndarray:
     return partial_mask
 
 
-def compare_packed(packed_text: jnp.ndarray, n_real: int,
-                   pos: jnp.ndarray, patt_packed: jnp.ndarray,
-                   plen: jnp.ndarray):
-    """Returns (lt, eq): suffix(pos) < pattern, suffix starts-with pattern.
-    All (B,) bool.  Handles text-boundary truncation exactly."""
+def compare_windows_packed(window: jnp.ndarray, pos: jnp.ndarray,
+                           n_real, patt_packed: jnp.ndarray,
+                           plen: jnp.ndarray):
+    """Returns (lt, eq) for pre-extracted packed ``window`` rows (B, W).
+    ``n_real`` may be a scalar or a per-row vector — rows of a fused
+    multi-store compare come from different texts."""
     n_words = patt_packed.shape[-1]
-    window = codec.extract_window(packed_text, pos, n_words)       # (B, W)
     mask = _word_masks(plen, n_words)
     a = window & mask
     b = patt_packed & mask
@@ -119,17 +119,32 @@ def compare_packed(packed_text: jnp.ndarray, n_real: int,
     return lt, eq
 
 
-def compare_codes(codes: jnp.ndarray, n_real: int,
-                  pos: jnp.ndarray, patt_codes: jnp.ndarray,
-                  plen: jnp.ndarray):
-    """Generic token path (vocab-sized alphabets).  codes is the padded
-    int32 text; out-of-range reads are -1 (< any real code)."""
+def compare_packed(packed_text: jnp.ndarray, n_real: int,
+                   pos: jnp.ndarray, patt_packed: jnp.ndarray,
+                   plen: jnp.ndarray):
+    """Returns (lt, eq): suffix(pos) < pattern, suffix starts-with pattern.
+    All (B,) bool.  Handles text-boundary truncation exactly."""
+    window = codec.extract_window(packed_text, pos, patt_packed.shape[-1])
+    return compare_windows_packed(window, pos, n_real, patt_packed, plen)
+
+
+def gather_suffix_codes(codes: jnp.ndarray, n_real, pos: jnp.ndarray,
+                        length: int) -> jnp.ndarray:
+    """(B, length) int32 suffix windows at ``pos``; reads past ``n_real``
+    come back -1 (< any real code), which is what makes truncated
+    suffixes sort first without an explicit fix-up."""
+    offs = jnp.arange(length, dtype=jnp.int32)[None, :]
+    idx = pos[:, None] + offs
+    return jnp.where(idx < n_real,
+                     jnp.take(codes, jnp.clip(idx, 0, codes.shape[0] - 1)),
+                     -1)
+
+
+def compare_suffix_codes(suf: jnp.ndarray, patt_codes: jnp.ndarray,
+                         plen: jnp.ndarray):
+    """(lt, eq) for pre-gathered token suffix windows (B, L)."""
     L = patt_codes.shape[-1]
     offs = jnp.arange(L, dtype=jnp.int32)[None, :]
-    idx = pos[:, None] + offs
-    suf = jnp.where(idx < n_real,
-                    jnp.take(codes, jnp.clip(idx, 0, codes.shape[0] - 1)),
-                    -1)
     valid = offs < plen[:, None]
     eq_w = jnp.where(valid, suf == patt_codes, True)
     prefix_eq = jnp.cumprod(eq_w.astype(jnp.int32), axis=-1)
@@ -139,6 +154,15 @@ def compare_codes(codes: jnp.ndarray, n_real: int,
     lt = jnp.any(first_diff & (suf < patt_codes), axis=-1)
     eq = jnp.all(eq_w, axis=-1)
     return lt, eq
+
+
+def compare_codes(codes: jnp.ndarray, n_real: int,
+                  pos: jnp.ndarray, patt_codes: jnp.ndarray,
+                  plen: jnp.ndarray):
+    """Generic token path (vocab-sized alphabets).  codes is the padded
+    int32 text; out-of-range reads are -1 (< any real code)."""
+    suf = gather_suffix_codes(codes, n_real, pos, patt_codes.shape[-1])
+    return compare_suffix_codes(suf, patt_codes, plen)
 
 
 def _compare(store: TabletStore, pos, patt, plen):

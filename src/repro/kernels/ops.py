@@ -11,9 +11,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codec
+from repro.core import query as _q
 from repro.kernels import pack2bit as _pk
 from repro.kernels import pattern_scan as _ps
 from repro.kernels import tablet_scan as _ts
+from repro.kernels import tier_scan as _tier
 
 
 def _interpret() -> bool:
@@ -67,3 +69,66 @@ def tablet_scan(patterns, plen, windows, pos, *, n_real: int):
     count, less, first = _ts.tablet_scan_pallas(
         pt, pl_, wt, po_, n_real=n_real, n_rows=BR, interpret=_interpret())
     return count[:BQ], less[:BQ], first[:BQ]
+
+
+def tier_scan(stack, patterns, plen):
+    """Kernel-backed fused tier scan (DNA-packed tables only).
+    patterns (B, W) uint32, plen (B,) int32; returns (count, less,
+    matches, first_g) int32 (T, B) — same contract as
+    ``tier_scan.fused_tier_scan``."""
+    T = stack.num_tiers
+    R = stack.rows
+    W = patterns.shape[1]
+    windows = jax.vmap(
+        lambda pk, sa_t: codec.extract_window(pk, sa_t, W))(
+            stack.text_packed, stack.sa)                    # (T, R, W)
+    wt, _ = _pad_to(jnp.transpose(windows, (0, 2, 1)).astype(jnp.uint32),
+                    _tier.BLOCK_R, 2)
+    sa_p, _ = _pad_to(stack.sa.astype(jnp.int32), _tier.BLOCK_R, 1)
+    pt, B = _pad_to(patterns.T.astype(jnp.uint32), _tier.BLOCK_Q, 1)
+    pl_, _ = _pad_to(plen.astype(jnp.int32), _tier.BLOCK_Q, 0, fill=1)
+    meta = jnp.zeros((T, 8), jnp.int32)
+    meta = meta.at[:, 0].set(stack.n_real.astype(jnp.int32))
+    meta = meta.at[:, 1].set(stack.n_rows.astype(jnp.int32))
+    meta = meta.at[:, 2].set(stack.offset.astype(jnp.int32))
+    meta = meta.at[:, 3].set(stack.lo.astype(jnp.int32))
+    meta = meta.at[:, 4].set(stack.hi.astype(jnp.int32))
+    count, less, matches, first = _tier.tier_scan_pallas(
+        pt, pl_, wt, sa_p, meta, interpret=_interpret())
+    return count[:, :B], less[:, :B], matches[:, :B], first[:, :B]
+
+
+def tier_scan_auto(stack, patterns, plen):
+    """Pick the Pallas tier kernel on TPU for packed-DNA batches; the jnp
+    binary-search path everywhere else (it is also the oracle)."""
+    if (not _interpret()) and stack.is_dna and patterns.dtype == jnp.uint32:
+        return tier_scan(stack, patterns, plen)
+    return _tier.fused_tier_scan(stack, patterns, plen)
+
+
+@jax.jit
+def fused_tiers(stack, patterns, plen):
+    """One launch over all delta tiers: (count, less, matches, first_g),
+    each (T, B) int32.  Used by mesh tables, where the base scan already
+    runs inside its own shard_map dispatch."""
+    return tier_scan_auto(stack, patterns, plen)
+
+
+@jax.jit
+def fused_single(store, stack, patterns, plen):
+    """THE single-device merged read: base binary search + all delta
+    tiers + the merge, one jitted launch end to end.  Returns
+    (merged MatchResult, base MatchResult, (count, less, matches,
+    first_g)).
+
+    On the jnp path the base and tier searches share ONE fori_loop
+    (``tier_scan.fused_table_scan``), so a merged read pays the serial
+    depth of the deepest store, not the sum; with the Pallas kernel the
+    dense tier scan rides its own launch next to the base search."""
+    if (not _interpret()) and stack.is_dna and patterns.dtype == jnp.uint32:
+        base = _q.query(store, patterns, plen)
+        tiers = tier_scan(stack, patterns, plen)
+    else:
+        base, tiers = _tier.fused_table_scan(store, stack, patterns, plen)
+    merged = _tier.merge_tier_results(base, tiers[0], tiers[3])
+    return merged, base, tiers

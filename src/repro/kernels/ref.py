@@ -1,6 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import codec
@@ -46,6 +47,41 @@ def _word_masks(plen, n_words):
     return jnp.where(r == 0, jnp.uint32(0),
                      jnp.where(r == 16, full,
                                ~((jnp.uint32(1) << (32 - 2 * r)) - 1)))
+
+
+def tier_scan_ref(patterns_t, plen, windows_t, sa, meta):
+    """Oracle for tier_scan: dense (T, BQ, BR) compare + straddle masks.
+    Shapes as in ``tier_scan_pallas``; returns four (T, BQ) int32."""
+    T, W, BR = windows_t.shape
+    BIG = jnp.int32(2**30)
+
+    def one_tier(win_t, sa_t, meta_t):
+        n_real, n_rows, offset, lo_b, hi_b = (meta_t[i] for i in range(5))
+        mask = _word_masks(plen, W)                        # (BQ, W)
+        a = win_t.T[None, :, :] & mask[:, None, :]         # (BQ, BR, W)
+        b = patterns_t.T[:, None, :] & mask[:, None, :]
+        eq_w = a == b
+        prefix_eq = jnp.cumprod(eq_w.astype(jnp.int32), axis=-1)
+        shifted = jnp.concatenate(
+            [jnp.ones_like(prefix_eq[..., :1]), prefix_eq[..., :-1]], axis=-1)
+        first_diff = (~eq_w) & (shifted == 1)
+        lt = jnp.any(first_diff & (a < b), axis=-1)        # (BQ, BR)
+        eq_all = jnp.all(eq_w, axis=-1)
+        truncated = sa_t[None, :] + plen[:, None] > n_real
+        eq = eq_all & ~truncated
+        lt = lt | (eq_all & truncated)
+        valid = jnp.arange(BR, dtype=jnp.int32)[None, :] < n_rows
+        eq = eq & valid
+        lt = lt & valid
+        g = sa_t[None, :] + offset
+        e = g + plen[:, None]
+        owned = eq & (e > lo_b) & (e <= hi_b)
+        return (jnp.sum(owned, axis=1).astype(jnp.int32),
+                jnp.sum(lt, axis=1).astype(jnp.int32),
+                jnp.sum(eq, axis=1).astype(jnp.int32),
+                jnp.min(jnp.where(owned, g, BIG), axis=1))
+
+    return jax.vmap(one_tier)(windows_t, sa.astype(jnp.int32), meta)
 
 
 def tablet_scan_ref(patterns_t, plen, windows_t, pos, *, n_real: int):

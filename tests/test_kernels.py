@@ -1,5 +1,6 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
 sweeps per kernel as required."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -7,7 +8,7 @@ import pytest
 from repro.core import codec, query as Q
 from repro.core.codec import random_dna
 from repro.core.tablet import build_tablet_store
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, tier_scan as TS
 
 
 @pytest.mark.parametrize("n", [1, 15, 16, 17, 1000, 16384, 50001])
@@ -71,3 +72,45 @@ def test_tablet_scan_matches_query_engine(nq, text_n):
     np.testing.assert_array_equal(np.asarray(count), np.asarray(rc))
     np.testing.assert_array_equal(np.asarray(less), np.asarray(rl))
     np.testing.assert_array_equal(np.asarray(first), np.asarray(rf))
+
+
+@pytest.mark.parametrize("nq,base_n,chunks", [
+    (17, 900, 3), (130, 2500, 5), (260, 1400, 4),
+])
+def test_tier_scan_kernel_vs_ref_vs_fused(nq, base_n, chunks):
+    """The fused tier kernel (interpret), its dense oracle, and the
+    pure-jnp production path agree bit-for-bit on a real TierStack."""
+    from repro.api import SuffixTable
+    table = SuffixTable.from_codes(random_dna(base_n, seed=base_n),
+                                   is_dna=True, memtable_limit=260)
+    for i in range(chunks):
+        table.append(random_dna(150, seed=1000 + i))
+    ts = table._tierset()
+    assert ts is not None and ts.stack.num_tiers >= 2
+    stack = ts.stack
+
+    pats = Q.random_patterns(nq, 1, 12, seed=nq)
+    _, pp, pl = Q.encode_patterns(pats, stack.max_query_len)
+
+    want = TS.fused_tier_scan(stack, pp, pl)
+    got = ops.tier_scan(stack, pp, pl)          # Pallas, interpret on CPU
+    for name, g, w in zip(("count", "less", "matches", "first_g"),
+                          got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+    # dense ref over the same unpadded stack operands
+    W = pp.shape[1]
+    windows = jax.vmap(lambda pk, sa_t: codec.extract_window(pk, sa_t, W))(
+        stack.text_packed, stack.sa)
+    wt = jnp.transpose(windows, (0, 2, 1))
+    meta = np.zeros((stack.num_tiers, 8), np.int32)
+    for k, v in enumerate((stack.n_real, stack.n_rows, stack.offset,
+                           stack.lo, stack.hi)):
+        meta[:, k] = np.asarray(v)
+    rref = ref.tier_scan_ref(pp.T.astype(jnp.uint32), pl, wt, stack.sa,
+                             jnp.asarray(meta))
+    for name, g, w in zip(("count", "less", "matches", "first_g"),
+                          rref, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg="ref:" + name)

@@ -1,0 +1,411 @@
+"""The unified read path: TierSet + fused multi-tier scan + adaptive
+coalescing (docs/read_path.md).
+
+Load-bearing properties:
+
+* over random append/seal/compact LSM schedules the fused read path —
+  ``scan_encoded`` counts, ``scan_batch`` merged counts / text-minimum
+  first_pos / top-k positions, ``locate_range`` enumeration — is
+  bit-identical to the per-tier fan-out oracle (base scan +
+  ``Run.match_positions`` + ``Memtable.match_positions`` merge) AND to
+  the paper's Algorithm 1 brute force, for DNA-packed and token tables;
+* ``TierSet.delta_positions`` (host slicing of the fused less/matches
+  bounds) returns exactly the per-tier ``match_positions`` sets without
+  any per-tier dispatch;
+* the base-only fast path skips tier fan-out entirely, and the planner's
+  ``fused_batches`` / ``base_only_batches`` / ``tier_reads`` counters
+  account every read (docs/client_api.md schema);
+* the adaptive ``QueryScheduler``: sparse arrivals take the inline fast
+  path (no coalesce-window sleep), concurrent callers still coalesce,
+  ``adaptive=False`` restores the fixed window, and the stats snapshot
+  exports ``window_ms_current`` / ``ewma_gap_ms`` / ``fast_path_queries``.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.api import Database, Query, SuffixTable
+from repro.api.client import QueryScheduler
+from repro.core import codec, query as Q
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+def _brute(combined, codes):
+    """(count, first_pos, positions) by Algorithm 1 over raw codes."""
+    cc = np.asarray(combined).astype(np.int32)
+    pc = np.asarray(codes).astype(np.int32)
+    k = len(pc)
+    pos = [i for i in range(len(cc) - k + 1) if (cc[i:i + k] == pc).all()]
+    return len(pos), (pos[0] if pos else -1), pos
+
+
+def _per_tier_oracle(table, patt, plen):
+    """The retired fan-out read: one base scan + one ``match_positions``
+    call per live tier, merged on host.  Returns (count, first_pos,
+    delta_positions) with delta_positions[i] sorted global starts."""
+    import jax.numpy as jnp
+    patt = jnp.asarray(patt)
+    plen_j = jnp.asarray(plen)
+    base = table.planner.scan_encoded(patt, plen_j)
+    tiers = [r for r in table.runs if r.length]
+    if table.memtable.size:
+        tiers.append(table.memtable)
+    per = [t.match_positions(patt, plen_j) for t in tiers]
+    B = int(np.asarray(plen).shape[0])
+    count = np.asarray(base.count).astype(np.int64)[:B].copy()
+    # base text-minimum: min over the base SA's prefix-match run
+    sa = np.asarray(table.store.sa).astype(np.int64)
+    pad = table.store.pad_count
+    fr = np.asarray(base.first_rank).astype(np.int64)[:B]
+    first = np.full(B, np.iinfo(np.int64).max)
+    for i in range(B):
+        if count[i] > 0:
+            lb = pad + fr[i]
+            first[i] = sa[lb:lb + count[i]].min()
+    delta = []
+    for i in range(B):
+        d = np.sort(np.concatenate(
+            [np.asarray(p[i], np.int64) for p in per]
+            + [np.zeros(0, np.int64)]))
+        delta.append(d)
+        count[i] += d.size
+        if d.size:
+            first[i] = min(first[i], d[0])
+    first = np.where(count > 0, first, -1)
+    return count, first, delta
+
+
+def _encode_for(table, pats):
+    """planner.encode for DNA strings; manual int32 codes otherwise
+    (token patterns are raw code arrays, not text)."""
+    import jax.numpy as jnp
+    if table.is_dna:
+        return table.planner.encode(pats)
+    W = max(len(p) for p in pats)
+    patt = np.zeros((len(pats), W), np.int32)
+    plen = np.array([len(p) for p in pats], np.int32)
+    for i, p in enumerate(pats):
+        patt[i, :len(p)] = np.asarray(p, np.int32)
+    return jnp.asarray(patt), jnp.asarray(plen)
+
+
+def _check_table(table, combined, pats, top_k=12):
+    """Fused read surfaces vs per-tier oracle vs brute force."""
+    patt, plen = _encode_for(table, pats)
+    ocount, ofirst, odelta = _per_tier_oracle(table, patt, plen)
+
+    # fused delta enumeration == per-tier match_positions, bit for bit
+    ts = table._tierset()
+    if ts is not None:
+        merged, tres = table.planner.scan_tiers(ts, patt, plen)
+        delta = ts.delta_positions(tres.less, tres.matches, plen)
+        for i in range(len(pats)):
+            np.testing.assert_array_equal(delta[i], odelta[i], err_msg=pats[i])
+
+    out = table.scan_batch(patt, plen, top_k=top_k)
+    res = table.scan_encoded(patt, plen)
+    for i, p in enumerate(pats):
+        codes_p = (codec.encode_dna(p) if table.is_dna
+                   else np.asarray(p, np.int32))
+        want, first, pos = _brute(combined, codes_p)
+        assert want == ocount[i] and first == ofirst[i], (p, "oracle split")
+        assert int(out.count[i]) == want, (p, int(out.count[i]), want)
+        assert int(res.count[i]) == want, (p, "scan_encoded")
+        assert int(out.first_pos[i]) == first, (p, "first_pos")
+        got = [int(x) for x in out.positions[i] if x >= 0]
+        assert got == pos[:top_k], p
+        if table.is_dna:                   # locate_range takes pattern text
+            after = pos[0] if pos else -1  # resume past the first hit
+            rng_pos = table.locate_range(p, after=after, limit=None)
+            assert [int(x) for x in rng_pos] == [q for q in pos
+                                                 if q > after], (p, "range")
+
+
+def _plant_patterns(rng, combined, boundaries, is_dna, n_random=8):
+    """Random patterns plus ones planted to straddle tier boundaries."""
+    pats = []
+    for _ in range(n_random):
+        L = int(rng.integers(1, 11))
+        s = int(rng.integers(0, max(1, len(combined) - L)))
+        frag = combined[s:s + L]
+        pats.append(codec.decode_dna(frag) if is_dna
+                    else np.asarray(frag, np.int32))
+    for b in boundaries:
+        for off in (1, 4):
+            lo, hi = b - off, b - off + off + 4
+            if 0 <= lo and hi <= len(combined):
+                frag = combined[lo:hi]
+                pats.append(codec.decode_dna(frag) if is_dna
+                            else np.asarray(frag, np.int32))
+    pats.append(codec.decode_dna(np.array([3, 3, 3, 2], np.uint8))
+                if is_dna else np.asarray([10 ** 6], np.int32))  # miss
+    return pats
+
+
+# ---------------------------------------------------------------------------
+# property: random LSM schedules, DNA and token tables
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(0, 1))
+@settings(max_examples=6, deadline=None)
+def test_property_fused_read_equals_per_tier_fanout(seed, n_steps, is_dna):
+    is_dna = bool(is_dna)
+    rng = np.random.default_rng(seed)
+    n0 = int(rng.integers(300, 900))
+    if is_dna:
+        base = codec.random_dna(n0, seed=seed)
+        table = SuffixTable.from_codes(base, is_dna=True,
+                                       memtable_limit=300)
+    else:
+        base = rng.integers(0, 40, n0).astype(np.int32)
+        table = SuffixTable.from_codes(base, is_dna=False,
+                                       max_query_len=32,
+                                       memtable_limit=300)
+    combined = base
+    boundaries = [len(base)]
+    for s in range(n_steps):
+        ln = int(rng.integers(30, 170))
+        app = (codec.random_dna(ln, seed=seed * 17 + s) if is_dna
+               else rng.integers(0, 40, ln).astype(np.int32))
+        table.append(app)
+        combined = np.concatenate([combined, app])
+        boundaries.append(len(combined))
+        op = rng.random()
+        if op < 0.25:
+            table.minor_compact()
+        elif op < 0.4:
+            table.compact()
+    pats = _plant_patterns(rng, combined, boundaries, is_dna)
+    _check_table(table, combined, pats)
+
+
+def test_fused_read_all_tier_shapes():
+    """Deterministic sweep of tier configurations: memtable only, runs
+    only, runs + memtable, and everything folded back to base."""
+    base = codec.random_dna(1200, seed=21)
+    table = SuffixTable.from_codes(base, is_dna=True)
+    combined = base
+    boundaries = [len(base)]
+
+    def grow(n, seed, seal):
+        nonlocal combined
+        app = codec.random_dna(n, seed=seed)
+        table.append(app)
+        combined = np.concatenate([combined, app])
+        boundaries.append(len(combined))
+        if seal:
+            table.minor_compact()
+
+    rng = np.random.default_rng(22)
+    grow(140, 30, seal=False)            # memtable only
+    assert not table.runs and table.memtable.size
+    _check_table(table, combined,
+                 _plant_patterns(rng, combined, boundaries, True))
+    table.minor_compact()                # runs only
+    grow(90, 31, seal=True)
+    assert len(table.runs) == 2 and table.memtable.size == 0
+    _check_table(table, combined,
+                 _plant_patterns(rng, combined, boundaries, True))
+    grow(110, 32, seal=False)            # runs + memtable
+    assert table.runs and table.memtable.size
+    _check_table(table, combined,
+                 _plant_patterns(rng, combined, boundaries, True))
+    table.compact()                      # folded: base-only fast path
+    assert not table.runs and table.memtable.size == 0
+    _check_table(table, combined,
+                 _plant_patterns(rng, combined, boundaries, True))
+
+
+# ---------------------------------------------------------------------------
+# planner counters + base-only fast path
+# ---------------------------------------------------------------------------
+def test_planner_counts_fused_and_base_only_reads():
+    table = SuffixTable.from_codes(codec.random_dna(800, seed=40),
+                                   is_dna=True, memtable_limit=500)
+    patt, plen = table.planner.encode(["ACGT", "GATTACA"])
+    s0 = table.planner.stats.as_dict()
+    assert s0["fused_batches"] == 0 and s0["base_only_batches"] == 0
+    assert s0["tier_reads"] == {"base": 0, "runs": 0, "memtable": 0}
+
+    table.scan_encoded(patt, plen)       # no tiers live -> base-only
+    s1 = table.planner.stats.as_dict()
+    assert s1["base_only_batches"] == 1 and s1["fused_batches"] == 0
+    assert s1["tier_reads"]["base"] == 1
+    assert s1["tier_reads"]["runs"] == 0 and s1["tier_reads"]["memtable"] == 0
+
+    table.append(codec.random_dna(80, seed=41))        # memtable live
+    table.scan_encoded(patt, plen)
+    s2 = table.planner.stats.as_dict()
+    assert s2["fused_batches"] == 1 and s2["base_only_batches"] == 1
+    assert s2["tier_reads"] == {"base": 2, "runs": 0, "memtable": 1}
+
+    table.minor_compact()                # one sealed run, empty memtable
+    table.append(codec.random_dna(60, seed=42))
+    table.scan_encoded(patt, plen)
+    s3 = table.planner.stats.as_dict()
+    assert s3["fused_batches"] == 2
+    assert s3["tier_reads"] == {"base": 3, "runs": 1, "memtable": 2}
+
+    # the counters surface through the public stats schema
+    ps = table.stats()["planner"]
+    for key in ("fused_batches", "base_only_batches", "tier_reads"):
+        assert key in ps, key
+    assert set(ps["tier_reads"]) == {"base", "runs", "memtable"}
+
+
+def test_base_only_fast_path_skips_tier_machinery():
+    """Zero runs + empty memtable must not build a TierSet stack."""
+    table = SuffixTable.from_codes(codec.random_dna(600, seed=43),
+                                   is_dna=True)
+    assert table._tierset() is None
+    out = table.scan(["ACGT"], top_k=4)
+    assert table.planner.stats.base_only_batches >= 1
+    assert table.planner.stats.fused_batches == 0
+    want, first, pos = _brute(codec.random_dna(600, seed=43),
+                              codec.encode_dna("ACGT"))
+    assert int(out.count[0]) == want and int(out.first_pos[0]) == first
+
+
+# ---------------------------------------------------------------------------
+# adaptive scheduler
+# ---------------------------------------------------------------------------
+def _db(codes, **kw):
+    db = Database.in_memory(**kw)
+    table = db.attach("t", SuffixTable.from_codes(codes, is_dna=True))
+    return db, table
+
+
+def test_sparse_submits_take_the_fast_path():
+    """Arrivals slower than the window must not pay the coalesce sleep:
+    the query executes inline on the caller thread."""
+    db, table = _db(codec.random_dna(2000, seed=50), coalesce_window_ms=250.0)
+    want = int(table.count(["ACGT"])[0])
+    try:
+        lat = []
+        for _ in range(4):
+            t0 = time.monotonic()
+            res = db.submit(Query.count("t", ["ACGT"])).result(timeout=30.0)
+            lat.append(time.monotonic() - t0)
+            assert res.ok and int(res.count[0]) == want
+            time.sleep(0.3)              # gap > window -> stay sparse
+        snap = db.stats()["scheduler"]
+        assert snap["fast_path_queries"] >= 3
+        assert snap["ewma_gap_ms"] is None or snap["ewma_gap_ms"] > 250.0
+        assert snap["window_ms_current"] == 0.0
+        # no 250 ms window sleep on the fast path
+        assert min(lat) < 0.2, lat
+    finally:
+        db.close()
+
+
+def test_burst_after_idle_still_coalesces():
+    """The fast path must yield to coalescing the moment load appears:
+    concurrent callers are batched, results bit-identical."""
+    db, table = _db(codec.random_dna(4000, seed=51), coalesce_window_ms=2.0)
+    pats = Q.random_patterns(24, 1, 10, seed=52)
+    want = table.scan(pats, top_k=4)
+    table.clear_cache()
+    results = [None] * len(pats)
+
+    def caller(i):
+        results[i] = db.submit(
+            Query.scan("t", [pats[i]], top_k=4)).result(timeout=30.0)
+
+    threads = [threading.Thread(target=caller, args=(i,))
+               for i in range(len(pats))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    for i, res in enumerate(results):
+        assert res is not None and res.ok
+        assert int(res.count[0]) == int(want.count[i])
+        assert (res.positions[0] == want.positions[i]).all()
+    s = db.scheduler.stats
+    assert s.executed == 24
+    assert s.batches < s.submitted           # coalescing still happens
+    db.close()
+
+
+def test_adaptive_off_restores_fixed_window():
+    db, _ = _db(codec.random_dna(900, seed=53), coalesce_window_ms=7.0,
+                adaptive_window=False)
+    try:
+        for _ in range(3):
+            res = db.submit(Query.count("t", ["ACGT"])).result(timeout=30.0)
+            assert res.ok
+        snap = db.stats()["scheduler"]
+        assert snap["fast_path_queries"] == 0
+        assert snap["window_ms_current"] == 7.0
+    finally:
+        db.close()
+
+
+def test_scheduler_stats_snapshot_schema():
+    sched = QueryScheduler(lambda name: None, window_ms=3.0)
+    snap = sched.stats_snapshot()
+    for key in ("submitted", "executed", "batches", "fast_path_queries",
+                "window_ms_current", "ewma_gap_ms"):
+        assert key in snap, key
+    assert snap["window_ms_current"] == 3.0 and snap["ewma_gap_ms"] is None
+    sched.close()
+
+
+# ---------------------------------------------------------------------------
+# mesh tables: sharded base dispatch (sentinel retries) + one fused launch
+# ---------------------------------------------------------------------------
+@pytest.mark.multidevice
+def test_mesh_fused_tiers_with_sentinel_retries(multidevice):
+    """On a mesh table the base scan keeps its routed dispatch — with a
+    starved capacity factor forcing -1/-2 sentinel retries — while all
+    delta tiers ride one fused launch; merged counts, text-minimum
+    first_pos, and top-k positions stay exact vs brute force."""
+    multidevice("""
+import numpy as np
+from repro.api import SuffixTable
+from repro.core import codec, query as Q
+from repro.core.planner import ScanPlanner, MODE_ROUTED
+
+codes = codec.random_dna(4096, seed=5)
+table = SuffixTable.from_codes(codes, is_dna=True)
+assert table.mesh is not None
+combined = codes
+for s in range(3):
+    app = codec.random_dna(120, seed=60 + s)
+    table.append(app)
+    combined = np.concatenate([combined, app])
+    if s < 2:
+        table.minor_compact()
+assert table.runs and table.memtable.size
+
+# starve routed capacity so the base dispatch hits both sentinel kinds
+pln = ScanPlanner(table.store, mesh=table.mesh, capacity_factor=0.25,
+                  routed_min_batch=8)
+table.planner = pln
+pats = ['A'] * 40 + Q.random_patterns(24, 1, 10, seed=11)
+patt, plen = pln.encode(pats)
+raw = pln.scan_encoded(patt, plen, mode=MODE_ROUTED, retry=False)
+assert (np.asarray(raw.count) < 0).any(), 'expected sentinels'
+
+out = table.scan_batch(patt, plen, top_k=6)
+cc = combined.astype(np.int32)
+for i, p in enumerate(pats):
+    pc = codec.encode_dna(p).astype(np.int32)
+    want, first = Q.brute_force_count(cc, pc)
+    assert int(out.count[i]) == want, (p, int(out.count[i]), want)
+    assert int(out.first_pos[i]) == first, (p, 'first_pos')
+    for q in out.positions[i]:
+        if q >= 0:
+            assert (cc[int(q):int(q) + len(p)] == pc).all()
+assert pln.stats.retried_overflow > 0
+assert pln.stats.fused_batches > 0 and pln.stats.tier_reads['runs'] > 0
+print('OK')
+""")

@@ -10,8 +10,8 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import client_bench, compaction_bench, kernel_bench, \
-        paper_tables, roofline, table_bench, wal_bench
+    from benchmarks import client_bench, compaction_bench, fm_bench, \
+        kernel_bench, paper_tables, roofline, table_bench, wal_bench
 
     benches = [
         ("table1_preprocess_build", paper_tables.bench_build_table1),
@@ -25,6 +25,7 @@ def main() -> None:
         ("kernel_pack_2bit", kernel_bench.bench_pack_throughput),
         ("table_merged_scan", table_bench.bench_table_ops),
         ("lsm_compaction", compaction_bench.bench_compaction),
+        ("fm_frozen_tier", fm_bench.bench_fm),
         ("client_coalescing", client_bench.bench_client),
         ("wal_group_commit", wal_bench.bench_wal),
     ]

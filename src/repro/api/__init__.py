@@ -11,12 +11,13 @@ requests by table name, coalesces concurrent callers through a
 from repro.api.catalog import Catalog
 from repro.api.client import Database, Page, Query, QueryFuture, \
     QueryResult, QueryScheduler, ReadSession
+from repro.api.fm import FMIndex
 from repro.api.memtable import Memtable
 from repro.api.runs import Run
 from repro.api.table import SuffixTable, default_root, open_table
 from repro.api.wal import RecoverySummary, WriteAheadLog
 
-__all__ = ["Catalog", "Database", "Memtable", "Page", "Query",
+__all__ = ["Catalog", "Database", "FMIndex", "Memtable", "Page", "Query",
            "QueryFuture", "QueryResult", "QueryScheduler", "ReadSession",
            "RecoverySummary", "Run", "SuffixTable", "WriteAheadLog",
            "default_root", "open_table"]

@@ -10,6 +10,8 @@ A catalog manages multiple named :class:`~repro.api.table.SuffixTable`\\ s
           arrays.npz  meta.json    #   codes + sa_real + mem_codes
         step_0000000002/ ...
         wal/wal.log                #   the table's live commit-log segment
+        fm/step_.../               #   frozen-tier FM-index artifact
+                                   #   (repro.api.fm, docs/storage_tiers.md)
 
 ``catalog.json`` is rewritten atomically (tmp + ``os.replace``) so a
 preempted create/drop never corrupts the listing.  Commit logs
@@ -27,13 +29,20 @@ import shutil
 import tempfile
 from typing import Optional
 
-from repro.api.table import SuffixTable, default_root
+from repro.api.table import SuffixTable, _check_name, default_root
 
 
 def table_wal_dir(root: str, name: str) -> str:
     """Directory holding ``name``'s commit-log segments under ``root``
     (the single place the WAL path layout is decided)."""
     return os.path.join(root, name, "wal")
+
+
+def table_fm_dir(root: str, name: str) -> str:
+    """Directory holding ``name``'s frozen-tier FM-index artifact (the
+    single place the fm/ path layout is decided — ``drop_table`` and the
+    crashed-create reconcile remove it with the table dir)."""
+    return os.path.join(root, name, "fm")
 
 
 class Catalog:
@@ -85,6 +94,11 @@ class Catalog:
         """Where ``name``'s commit log lives (``repro.api.wal``)."""
         return table_wal_dir(self.root, name)
 
+    def fm_dir(self, name: str) -> str:
+        """Where ``name``'s frozen FM-index artifact lives
+        (``repro.api.fm``)."""
+        return table_fm_dir(self.root, name)
+
     # -- table lifecycle -----------------------------------------------------
     def create_table(self, name: str, codes, **kw) -> SuffixTable:
         return SuffixTable.create(name, codes, root=self.root, **kw)
@@ -93,12 +107,26 @@ class Catalog:
         return SuffixTable.open(name, root=self.root, **kw)
 
     def drop_table(self, name: str, *, missing_ok: bool = False) -> None:
-        """Unregister ``name`` and delete its on-disk versions."""
+        """Unregister ``name`` and delete its on-disk state — snapshots,
+        commit log, and every per-table auxiliary artifact dir (wal/,
+        fm/) under the table directory.
+
+        An UNREGISTERED name whose directory still exists is a crashed
+        create/drop remnant: its orphan dir (which can hold a frozen
+        FM-index or a stale log, not just snapshots) is removed too,
+        instead of leaking forever behind the KeyError.  The name is
+        validated before any rmtree so a crafted name can never escape
+        the root."""
+        _check_name(name)
         data = self.load()
+        table_dir = os.path.join(self.root, name)
         if name not in data["tables"]:
+            if os.path.isdir(table_dir):      # orphan-dir reconcile
+                shutil.rmtree(table_dir, ignore_errors=True)
+                return
             if missing_ok:
                 return
             raise KeyError(f"no table {name!r} in catalog {self.root!r}")
         del data["tables"][name]
         self._write(data)
-        shutil.rmtree(os.path.join(self.root, name), ignore_errors=True)
+        shutil.rmtree(table_dir, ignore_errors=True)

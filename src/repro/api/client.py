@@ -832,6 +832,16 @@ class Database:
         t = self.table(table)
         return self.scheduler.run_exclusive(t, t.compact)
 
+    def freeze(self, table: str, *, sample_rate: int = 32) -> dict:
+        """Freeze ``table`` onto the FM-index tier (serialized against
+        its readers like :meth:`compact` — the planner rebind must not
+        land mid-scan).  Returns the table's per-tier resident-bytes
+        stats so the footprint change is immediately observable."""
+        t = self.table(table)
+        self.scheduler.run_exclusive(
+            t, lambda: t.freeze(sample_rate=sample_rate))
+        return t.stats()["tiers"]
+
     def read_rows(self, table: str, pattern: str, *, page_size: int = 256,
                   start_after: int = -1) -> ReadSession:
         """Stream every occurrence position of ``pattern`` in pages."""

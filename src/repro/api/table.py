@@ -121,8 +121,10 @@ class SuffixTable:
                  distributed_build: Optional[bool] = None,
                  wal: Optional[bool] = None,
                  group_commit_ms: float = 0.0,
+                 fm_threshold: Optional[int] = None,
                  _store: Optional[TabletStore] = None,
-                 _planner: Optional[ScanPlanner] = None):
+                 _planner: Optional[ScanPlanner] = None,
+                 _fm=None):
         self.name = name
         self.root = root
         self.version = int(version)
@@ -134,6 +136,8 @@ class SuffixTable:
         self.cache_size = int(cache_size)
         self.memtable_limit = memtable_limit
         self.max_runs = max_runs
+        self.fm_threshold = fm_threshold
+        self.fm = None
         self.runs: list[Run] = []
         self._codes = np.asarray(codes)
 
@@ -144,6 +148,9 @@ class SuffixTable:
                 _store, cache_size=cache_size,
                 capacity_factor=capacity_factor,
                 routed_min_batch=routed_min_batch)
+        elif _fm is not None:                        # open(): frozen tier
+            self.mesh = None
+            self._attach_frozen(_fm)
         else:
             n_dev = len(jax.devices())
             self.mesh = make_tablet_mesh(n_dev) if n_dev > 1 else None
@@ -185,6 +192,7 @@ class SuffixTable:
         codes, is_dna = _as_codes(codes, is_dna)
         table = cls(codes, cls._build_sa_for(codes, max_query_len, is_dna),
                     is_dna=is_dna, max_query_len=max_query_len, **kw)
+        table._maybe_freeze()
         return table
 
     @classmethod
@@ -240,6 +248,7 @@ class SuffixTable:
         catalog.register(name, {"is_dna": table.is_dna,
                                 "max_query_len": table.max_query_len})
         table._persist()
+        table._maybe_freeze()       # fm_threshold policy; re-persists frozen
         table._open_wal(fresh=True)
         return table
 
@@ -264,11 +273,22 @@ class SuffixTable:
                 f"no persisted version of table {name!r} under {root!r}")
         arrays, extra = mgr.restore_arrays(step)
         arrays = _named_arrays(arrays)
+        fm = None
+        if extra.get("frozen"):
+            from repro.api.catalog import table_fm_dir
+            from repro.api.fm import FMIndex
+            fm = FMIndex.load(table_fm_dir(root, name))
+            if fm is None or fm.n != int(arrays["codes"].shape[0]):
+                # artifact missing/stale (partial copy, old format):
+                # rebuild from codes — freeze state survives, bit-exactly
+                fm = FMIndex.build(
+                    arrays["codes"], None, is_dna=bool(extra["is_dna"]),
+                    sample_rate=int(extra.get("fm_sample_rate") or 32))
         table = cls(arrays["codes"], arrays["sa_real"],
                     is_dna=bool(extra["is_dna"]),
                     max_query_len=int(extra["max_query_len"]),
                     name=name, root=root, version=int(extra["version"]),
-                    **kw)
+                    _fm=fm, **kw)
         for i, rm in enumerate(extra.get("runs", [])):
             table.runs.append(Run.restore(
                 arrays[f"run{i}_tail"], arrays[f"run{i}_codes"],
@@ -283,6 +303,7 @@ class SuffixTable:
         # this snapshot was published) through the normal memtable path
         table._wal_seq = int(extra.get("wal_seq", 0))
         table._open_wal(fresh=False)
+        table._maybe_freeze()       # threshold may be new on this open
         return table
 
     @staticmethod
@@ -316,7 +337,37 @@ class SuffixTable:
                 capacity_factor=self.capacity_factor,
                 routed_min_batch=self.routed_min_batch)
         else:
-            planner.rebind(self.store)
+            planner.rebind(self.store)          # also drops any FM binding
+        self.fm = None
+
+    def _attach_frozen(self, fm) -> None:
+        """Swap the base tier onto the FM-index: base reads route through
+        the backward-search kernel and the raw SA (device array + host
+        mirror + packed text) is DROPPED — that is the footprint win.  A
+        metadata-only store keeps the shape facts (``n_real``/``n_pad``/
+        codecs) the planner and delta tiers read; the raw host codes stay
+        (memtable overlap windows, compaction, persistence all need
+        them).  Frozen tables serve single-replica — an active mesh is
+        released."""
+        if fm.n != self.n_base or fm.is_dna != self.is_dna:
+            raise ValueError(
+                f"FM-index (n={fm.n}, is_dna={fm.is_dna}) does not match "
+                f"the table (n={self.n_base}, is_dna={self.is_dna})")
+        self.fm = fm
+        self.mesh = None
+        self.store = TabletStore(
+            text_packed=None, text_codes=None,
+            sa=jnp.zeros((0,), jnp.int32),
+            n_real=self.n_base, n_pad=self.n_base,
+            is_dna=self.is_dna, max_query_len=self.max_query_len)
+        planner = getattr(self, "planner", None)
+        if planner is None:
+            self.planner = ScanPlanner(
+                self.store, cache_size=self.cache_size,
+                capacity_factor=self.capacity_factor,
+                routed_min_batch=self.routed_min_batch, fm=fm)
+        else:
+            planner.rebind(self.store, fm=fm)
 
     # -- introspection -------------------------------------------------------
     def __len__(self) -> int:
@@ -336,6 +387,11 @@ class SuffixTable:
     @property
     def is_persistent(self) -> bool:
         return self._manager is not None
+
+    @property
+    def is_frozen(self) -> bool:
+        """True when the base tier serves from the FM-index."""
+        return self.fm is not None
 
     @property
     def write_generation(self) -> int:
@@ -380,6 +436,8 @@ class SuffixTable:
                 "run_count": len(self.runs),
                 "run_rows": self.n_logical - self.n_base,
                 "memtable_rows": self.memtable.size,
+                "frozen": self.fm is not None,
+                "resident_bytes": self._resident_bytes(),
             },
             "cache": {
                 "entries": len(self._cache),
@@ -395,6 +453,39 @@ class SuffixTable:
                         else None),
                 "recovery": self._recovery,
             },
+        }
+
+    def _resident_bytes(self) -> dict:
+        """Per-tier index footprint in bytes (the ``stats()["tiers"]
+        ["resident_bytes"]`` schema, docs/storage_tiers.md).  ``base_sa``
+        counts the device SA plus the lazily-materialized host mirror;
+        ``text_device`` the packed/padded device text; both drop to 0 on
+        a frozen table, where ``fm`` carries the compressed index
+        instead.  ``text_host`` (the raw 1 B/sym code array every table
+        keeps for compaction and memtable overlap) is reported separately
+        so the index-vs-index comparison stays clean."""
+        base_sa = int(self.store.sa.size) * 4
+        if self.planner._sa_host is not None:
+            base_sa += int(self.planner._sa_host.nbytes)
+        text_dev = 0
+        if self.store.text_packed is not None:
+            text_dev += int(self.store.text_packed.size) * 4
+        if self.store.text_codes is not None:
+            text_dev += int(self.store.text_codes.size) * 4
+        run_bytes = 0
+        for r in self.runs:
+            run_bytes += int(np.asarray(r.tail).nbytes)
+            run_bytes += int(np.asarray(r.codes).nbytes)
+            sa_p = getattr(r, "sa_padded", None)
+            if sa_p is not None:
+                run_bytes += int(np.asarray(sa_p).nbytes)
+        return {
+            "base_sa": base_sa,
+            "fm": self.fm.resident_bytes() if self.fm is not None else 0,
+            "text_device": text_dev,
+            "runs": run_bytes,
+            "memtable": int(self.memtable.size),
+            "text_host": int(self._codes.nbytes),
         }
 
     def _invalidate_caches(self) -> None:
@@ -472,12 +563,17 @@ class SuffixTable:
         nz = np.flatnonzero((base_count > 0) & (base_rank >= 0))
         if nz.size == 0:
             return out
-        sa = self._sa()
         cnt = base_count[nz].astype(np.int64)
         starts = self.store.pad_count + base_rank[nz].astype(np.int64)
         seg = np.concatenate([[0], np.cumsum(cnt)[:-1]])
         flat = np.repeat(starts - seg, cnt) + np.arange(int(cnt.sum()))
-        out[nz] = np.minimum.reduceat(sa[flat].astype(np.int64), seg)
+        if self.fm is not None:
+            # frozen tier: no SA to gather — LF-walk the SA$ rows
+            # (real-SA row r is SA$ row r + 1) back to text positions
+            vals = self.fm.ranks_to_positions(flat + 1)
+        else:
+            vals = self._sa()[flat]
+        out[nz] = np.minimum.reduceat(vals.astype(np.int64), seg)
         return out
 
     def scan_encoded(self, patt, plen, *, mode: Optional[str] = None
@@ -503,6 +599,9 @@ class SuffixTable:
         if cb <= 0 or base_rank[i] < 0:
             return np.zeros((0,), np.int64)
         lb = self.store.pad_count + int(base_rank[i])
+        if self.fm is not None:
+            rows = np.arange(lb + 1, lb + 1 + cb)     # SA$ rows of the run
+            return self.fm.ranks_to_positions(rows).astype(np.int64)
         return self._sa()[lb:lb + cb].astype(np.int64)
 
     def scan_batch(self, patt, plen, top_k: int = 0) -> ScanOutcome:
@@ -769,6 +868,49 @@ class SuffixTable:
             self._persist()
         return len(self.runs)
 
+    # -- frozen tier ---------------------------------------------------------
+    def _fm_dir(self) -> str:
+        from repro.api.catalog import table_fm_dir
+        return table_fm_dir(self.root, self.name)
+
+    def freeze(self, *, sample_rate: int = 32) -> "SuffixTable":
+        """Convert the base tier to a frozen FM-index (docs/
+        storage_tiers.md): the BWT is derived from the current base SA,
+        2-bit-packed with blocked Occ checkpoints and a sampled SA, and
+        the raw suffix array is dropped — ~10x less resident index per
+        symbol.  Reads route through the backward-search kernel;
+        ``count()`` becomes O(pattern_len), independent of text size.
+        Post-freeze appends keep working: they land in the memtable /
+        runs as usual and merge with FM base results through the same
+        fused tier path.  Persistent tables save the artifact under the
+        table's ``fm/`` dir and re-publish the snapshot.  Idempotent."""
+        if self.fm is not None:
+            return self
+        from repro.api.fm import FMIndex
+        sa_real = np.asarray(self.store.sa)[self.store.pad_count:]
+        # merge-built SAs are exact only to the compare depth; build()
+        # verifies full order and re-sorts if the check fails, so the
+        # BWT is always derived from a true full suffix array
+        fm = FMIndex.build(self._codes, sa_real, is_dna=self.is_dna,
+                           sample_rate=sample_rate)
+        self._attach_frozen(fm)
+        if self._manager is not None:
+            fm.save(self._fm_dir(), self.version)
+            self._persist()
+        return self
+
+    def _maybe_freeze(self) -> None:
+        """Apply the ``fm_threshold`` policy: freeze once the base tier
+        reaches the threshold (checked after create/open/compact — the
+        points where the base grows)."""
+        if (self.fm is None and self.fm_threshold is not None
+                and self.n_base >= int(self.fm_threshold)):
+            from repro.api.fm import MAX_VOCAB
+            if (not self.is_dna and self._codes.size
+                    and int(self._codes.max()) >= MAX_VOCAB):
+                return      # policy no-op: vocab beyond the frozen cap
+            self.freeze()
+
     def _delta_codes(self) -> np.ndarray:
         """All un-compacted symbols (sealed runs + memtable), in order."""
         parts = [r.codes for r in self.runs]
@@ -792,7 +934,17 @@ class SuffixTable:
         if delta.size == 0:
             return self.version
         combined = np.concatenate([self._codes, delta])
-        if self.mesh is not None and self._distributed_build:
+        was_frozen = self.fm is not None
+        fm_rate = self.fm.sample_rate if was_frozen else None
+        if was_frozen:
+            # the raw SA was dropped at freeze time; reconstruct it from
+            # the index (vectorized LF walks) as the merge input, then
+            # compact live and re-freeze over the merged text below
+            base_sa = self.fm.suffix_array().astype(np.int32)
+            sa_real = merge_delta_sa(
+                combined, self.n_base, base_sa,
+                is_dna=self.is_dna, max_query_len=self.max_query_len)
+        elif self.mesh is not None and self._distributed_build:
             sa_real = self.__class__._build_sa_for(
                 combined, self.max_query_len, self.is_dna)
         else:
@@ -801,12 +953,16 @@ class SuffixTable:
                 combined, self.n_base, np.asarray(self.store.sa)[pad:],
                 is_dna=self.is_dna, max_query_len=self.max_query_len)
         self._codes = combined
-        self._attach(combined, sa_real)      # rebind bumps the planner cache
-        self.runs = []
+        self._attach(combined, sa_real)      # rebind bumps the planner
+        self.runs = []                       # cache AND drops any FM binding
         self._reset_memtable()
         self._invalidate_caches()
         self.version += 1
         self._persist()
+        if was_frozen:
+            self.freeze(sample_rate=fm_rate)  # frozen is a sticky tier state
+        else:
+            self._maybe_freeze()
         return self.version
 
     def flush(self) -> None:
@@ -831,7 +987,13 @@ class SuffixTable:
     def _persist(self) -> None:
         if self._manager is None:
             return
-        sa_real = self._sa()[self.store.pad_count:]
+        if self.fm is not None:
+            # frozen: the SA was dropped — the FM artifact (saved under
+            # fm/ by freeze()) is the base index on disk; open() rebuilds
+            # from codes if the artifact is ever missing
+            sa_real = np.zeros((0,), np.int32)
+        else:
+            sa_real = self._sa()[self.store.pad_count:]
         state = {"codes": self._codes,
                  "sa_real": sa_real,
                  "mem_codes": self.memtable.appended}
@@ -847,7 +1009,10 @@ class SuffixTable:
                  "max_query_len": self.max_query_len,
                  "n_base": self.n_base, "runs": runs_meta,
                  "mem_len": self.memtable.size,
-                 "wal_seq": self._wal_seq}
+                 "wal_seq": self._wal_seq,
+                 "frozen": self.fm is not None,
+                 "fm_sample_rate": (self.fm.sample_rate
+                                    if self.fm is not None else None)}
         # always publish under a FRESH step: CheckpointManager.save on an
         # existing step rmtree's it before the rename, so re-publishing
         # the same version in place (flush / every automatic seal) would

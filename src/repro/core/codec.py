@@ -81,6 +81,21 @@ def pack_2bit_batch(codes: np.ndarray) -> np.ndarray:
         (lanes << shifts[None, None, :]).astype(np.uint32), axis=2)
 
 
+def unpack_2bit_batch(words: np.ndarray, n_bases: int) -> np.ndarray:
+    """Batched host-side unpack: (B, W) uint32 words -> (B, n_bases) uint8
+    codes — the exact inverse of :func:`pack_2bit_batch` (same big-endian
+    layout).  Pure numpy: the FM-index Occ builder unpacks every BWT block
+    once at freeze time and must not pay a jnp dispatch per block."""
+    words = np.asarray(words, dtype=np.uint32)
+    B, W = words.shape
+    if n_bases > W * BASES_PER_WORD:
+        raise ValueError(f"n_bases={n_bases} exceeds the {W} words' "
+                         f"{W * BASES_PER_WORD} slots")
+    shifts = (30 - 2 * np.arange(BASES_PER_WORD)).astype(np.uint32)
+    lanes = (words[:, :, None] >> shifts[None, None, :]) & np.uint32(3)
+    return lanes.reshape(B, W * BASES_PER_WORD)[:, :n_bases].astype(np.uint8)
+
+
 def unpack_2bit(words: jnp.ndarray, n_bases: int) -> jnp.ndarray:
     """Inverse of pack_2bit."""
     words = jnp.asarray(words, dtype=jnp.uint32)

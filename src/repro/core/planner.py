@@ -62,12 +62,13 @@ from repro.core.tablet import TabletStore
 MODE_SINGLE = "single"
 MODE_BROADCAST = "broadcast"
 MODE_ROUTED = "routed"
+MODE_FM = "fm"            # frozen tier: FM-index backward search
 
 
 @dataclasses.dataclass(frozen=True)
 class ScanPlan:
     """One planning decision: which executor a batch will run through."""
-    mode: str      # MODE_SINGLE | MODE_BROADCAST | MODE_ROUTED
+    mode: str      # MODE_SINGLE | MODE_BROADCAST | MODE_ROUTED | MODE_FM
     reason: str
     batch: int
 
@@ -92,7 +93,7 @@ class PlannerStats:
     pad_slots: int = 0
     mode_counts: dict = dataclasses.field(
         default_factory=lambda: {MODE_SINGLE: 0, MODE_BROADCAST: 0,
-                                 MODE_ROUTED: 0})
+                                 MODE_ROUTED: 0, MODE_FM: 0})
     # fused read-path counters (docs/read_path.md): ``fused_batches``
     # crossed the device boundary ONCE for base + all delta tiers;
     # ``base_only_batches`` took the no-delta fast path.  ``tier_reads``
@@ -259,9 +260,11 @@ class ScanPlanner:
     def __init__(self, store: TabletStore, *, mesh=None,
                  axis_name: str = "tablets", capacity_factor: float = 2.0,
                  routed_min_batch: int = 64, cache_size: int = 4096,
-                 max_pattern_len: Optional[int] = None):
+                 max_pattern_len: Optional[int] = None, fm=None):
         self.store = store
-        self.mesh = mesh
+        self.mesh = mesh if fm is None else None   # frozen = single-replica
+        self.fm = fm
+        mesh = self.mesh
         self.axis_name = axis_name
         if mesh is not None:
             p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
@@ -281,13 +284,21 @@ class ScanPlanner:
         # (patt, plen) -> MatchResult
         self._executors: dict[str, Callable] = {}
 
-    def rebind(self, store: TabletStore) -> None:
+    def rebind(self, store: TabletStore, *, fm=None) -> None:
         """Swap the underlying store in place (major compaction publishes
         a new base).  Captured planner references — the serving engine
         holds one — keep serving the NEW text instead of going silently
         stale: jitted executors are rebuilt lazily against the new store,
         the host SA copy is dropped, and the string-result cache is
-        generation-bumped.  Accumulated stats survive the rebind."""
+        generation-bumped.  Accumulated stats survive the rebind.
+
+        ``fm`` swaps the table onto (or off) the frozen tier: base reads
+        route through the FM-index instead of ``store.sa``.  Frozen
+        tables serve single-replica, so a live mesh is dropped (the
+        store's divisibility constraint goes with it)."""
+        self.fm = fm
+        if fm is not None:
+            self.mesh = None
         if self.mesh is not None:
             p = self.num_tablets
             if store.n_pad % p != 0:
@@ -317,6 +328,9 @@ class ScanPlanner:
 
     def plan(self, batch: int) -> ScanPlan:
         """Pick the executor for a batch of ``batch`` queries."""
+        if self.fm is not None:
+            return ScanPlan(MODE_FM,
+                            "frozen table: FM backward search", batch)
         p = self.num_tablets
         if p <= 1:
             return ScanPlan(MODE_SINGLE, "no mesh / single device", batch)
@@ -341,6 +355,13 @@ class ScanPlanner:
         store = self.store
         if mode == MODE_SINGLE:
             return jax.jit(lambda patt, plen: Q.query(store, patt, plen))
+        if mode == MODE_FM:
+            if self.fm is None:
+                raise ValueError("mode 'fm' requires a frozen table "
+                                 "(planner has no FM-index bound)")
+            from repro.kernels import ops
+            fmarr = self.fm.arrays
+            return lambda patt, plen: ops.fm_search(fmarr, patt, plen)
 
         from jax.sharding import PartitionSpec as P
         ax = self.axis_name
@@ -435,9 +456,10 @@ class ScanPlanner:
         B = int(patt.shape[0])
         self._check_plen(plen, B, n_real)
         chosen = mode or self.plan(B).mode
-        if chosen not in (MODE_SINGLE, MODE_BROADCAST, MODE_ROUTED):
+        if chosen not in (MODE_SINGLE, MODE_BROADCAST, MODE_ROUTED,
+                          MODE_FM):
             raise ValueError(f"unknown scan mode {chosen!r}")
-        if (chosen != MODE_SINGLE and self.mesh is None
+        if (chosen not in (MODE_SINGLE, MODE_FM) and self.mesh is None
                 and chosen not in self._executors):  # injected fakes are ok
             raise ValueError(
                 f"mode {chosen!r} requires a mesh; this planner has none")
@@ -566,10 +588,21 @@ class ScanPlanner:
     def positions_from_result(self, res: MatchResult,
                               top_k: int = 8) -> np.ndarray:
         """Enumerate positions for an already-exact MatchResult."""
-        sa = self._sa()
         count = np.asarray(res.count)
         found = np.asarray(res.found)
         first_rank = np.asarray(res.first_rank)
+        if self.fm is not None:
+            # frozen tier: no SA to slice — LF-walk the SA$ rows
+            # [lo, lo + min(count, top_k)) back to text positions
+            k = np.arange(max(int(top_k), 1))[None, :]
+            rows = first_rank[:, None] + 1 + k           # SA$ row = rank + 1
+            valid = ((found & (first_rank >= 0))[:, None]
+                     & (k < count[:, None]))
+            rows = np.clip(rows, 1, self.fm.n)
+            pos = self.fm.ranks_to_positions(
+                rows.reshape(-1)).reshape(rows.shape)
+            return np.where(valid, pos, -1)[:, :top_k].astype(np.int64)
+        sa = self._sa()
         lb = first_rank + self.store.pad_count        # global SA row of lb
         k = np.arange(max(int(top_k), 1))[None, :]
         idx = lb[:, None] + k

@@ -1,0 +1,309 @@
+"""FM-index backward-search kernels: rank/select over a compressed BWT.
+
+The frozen storage tier (``repro.api.fm``) replaces the base suffix
+array with a Burrows-Wheeler index — the move both follow-up papers
+(arXiv 2007.10095, 2107.03341) make at genome scale.  ``count()``
+becomes O(pattern_len) independent of text size: one backward-search
+step per pattern symbol, each step two rank queries over the packed BWT.
+
+Index layout (built host-side by ``repro.api.fm.FMIndex``):
+
+* the BWT is taken over ``T$`` (virtual sentinel, ``$`` < all symbols),
+  so its ``n + 1`` rows are the real suffix array plus one sentinel
+  row.  Row ``i >= 1`` of ``SA$`` is row ``i - 1`` of the real SA, and
+  the backward-search lower bound ``lo`` maps to ``first_rank = lo - 1``
+  — bit-identical to the binary-search path, including ties (the base
+  builder's shorter-suffix-first convention IS the sentinel order);
+* DNA: 2-bit-packed words (``pack2bit`` layout), rank = blocked Occ
+  checkpoint (every ``SB`` symbols) + an in-block popcount bit trick;
+  the sentinel row stores dummy symbol 0 and rank subtracts it;
+* tokens: uint8 BWT, per-symbol Occ checkpoints, compare-equal sums.
+
+Per-step pattern symbols are pre-extracted into a dense ``(steps, B)``
+plan (-1 = step inactive for that query), so the jnp oracle and the
+Pallas kernel execute the identical schedule: the kernel's inner loop is
+checkpoint gathers + popcounts, no per-query pattern indexing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+SB = 64                 # symbols per Occ checkpoint block
+WPB = SB // 16          # packed words per block (DNA)
+BLOCK_Q = 128           # queries per Pallas program
+_EVEN = 0x55555555      # every 2-bit slot's low bit
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("bwt", "occ", "cc", "marked", "marked_rank",
+                      "samples", "sent_row", "n"),
+         meta_fields=("is_dna", "sample_rate", "vocab"))
+@dataclasses.dataclass(frozen=True)
+class FMArrays:
+    """Device view of one frozen table's FM-index (jit-friendly pytree).
+
+    ``rows = n + 1`` BWT rows (row 0 is the ``$``-only suffix).  ``occ``
+    holds exclusive prefix counts of the RAW symbol stream (the sentinel
+    row's dummy 0 included — rank() subtracts it); ``cc[c]`` is
+    ``C$[c] = 1 + #{symbols < c}``.  ``marked``/``marked_rank``/
+    ``samples`` are the sampled-SA structures for locate(): row r is
+    marked iff its text position ``SA$[r] % sample_rate == 0``, so every
+    LF walk terminates within ``sample_rate`` steps."""
+    bwt: jnp.ndarray          # DNA: (Wb,) uint32 packed | tokens: (Lp,) int32
+    occ: jnp.ndarray          # (nblk + 1, vocab) int32 checkpoint counts
+    cc: jnp.ndarray           # (vocab,) int32  C$ array
+    marked: jnp.ndarray       # (Wm,) uint32 bitvector over rows
+    marked_rank: jnp.ndarray  # (Wm,) int32 set bits before each word
+    samples: jnp.ndarray      # (S,) int32 SA$ values of marked rows
+    sent_row: jnp.ndarray     # () int32 row whose BWT symbol is $
+    n: jnp.ndarray            # () int32 real text length (rows - 1)
+    is_dna: bool
+    sample_rate: int
+    vocab: int
+
+
+# ---------------------------------------------------------------------------
+# rank — Occ(c, i) = occurrences of c in bwt$[0:i)
+# ---------------------------------------------------------------------------
+def _rank_packed(bwt, occ_flat, sent_row, c, i):
+    """Vectorized packed-DNA rank: checkpoint gather + per-word popcount
+    bit trick.  ``c``/``i`` int32 arrays of one shape."""
+    blk = i // SB
+    base = jnp.take(occ_flat, blk * 4 + c)
+    rem = i - blk * SB
+    pat = c.astype(jnp.uint32) * jnp.uint32(_EVEN)      # symbol repeated
+    cnt = jnp.zeros_like(i)
+    for j in range(WPB):
+        w = jnp.take(bwt, blk * WPB + j)
+        v = jnp.clip(rem - 16 * j, 0, 16)               # slots in range
+        x = w ^ pat
+        y = (~x) & ((~x) >> 1) & jnp.uint32(_EVEN)      # bit per match
+        sh = (2 * (16 - jnp.clip(v, 1, 16))).astype(jnp.uint32)
+        keep = jnp.where(v > 0, jnp.uint32(_EVEN) << sh, jnp.uint32(0))
+        cnt = cnt + lax.population_count(y & keep).astype(jnp.int32)
+    return base + cnt - ((c == 0) & (sent_row < i)).astype(jnp.int32)
+
+
+def _rank_codes(bwt, occ_flat, sent_row, vocab, c, i):
+    """Vectorized token rank: checkpoint gather + in-block compare-equal
+    sum over the SB-symbol window."""
+    blk = i // SB
+    base = jnp.take(occ_flat, blk * vocab + c)
+    rem = i - blk * SB
+    offs = jnp.arange(SB, dtype=jnp.int32)
+    vals = jnp.take(bwt, blk[..., None] * SB + offs)    # clips out of range
+    hit = (vals == c[..., None]) & (offs < rem[..., None])
+    cnt = jnp.sum(hit.astype(jnp.int32), axis=-1)
+    return base + cnt - ((c == 0) & (sent_row < i)).astype(jnp.int32)
+
+
+def rank(fa: FMArrays, c, i):
+    """Occ(c, i) over the index — the rank primitive shared by backward
+    search and LF walks (jnp oracle; the Pallas kernel inlines the
+    packed variant)."""
+    occ_flat = fa.occ.reshape(-1)
+    if fa.is_dna:
+        return _rank_packed(fa.bwt, occ_flat, fa.sent_row, c, i)
+    return _rank_codes(fa.bwt, occ_flat, fa.sent_row, fa.vocab, c, i)
+
+
+# ---------------------------------------------------------------------------
+# per-step symbol plan
+# ---------------------------------------------------------------------------
+def syms_from_packed(patt: jnp.ndarray, plen: jnp.ndarray,
+                     steps: int) -> jnp.ndarray:
+    """(B, W) packed patterns -> (steps, B) int32 backward-order symbols
+    (step t processes pattern position ``plen - 1 - t``; -1 = inactive)."""
+    j = plen[None, :].astype(jnp.int32) - 1 - jnp.arange(
+        steps, dtype=jnp.int32)[:, None]                   # (steps, B)
+    valid = j >= 0
+    jc = jnp.clip(j, 0, steps - 1)
+    words = jnp.take_along_axis(patt, (jc // 16).T, axis=1).T
+    sh = (30 - 2 * (jc % 16)).astype(jnp.uint32)
+    sym = ((words >> sh) & jnp.uint32(3)).astype(jnp.int32)
+    return jnp.where(valid, sym, -1)
+
+
+def syms_from_codes(patt: jnp.ndarray, plen: jnp.ndarray,
+                    steps: int) -> jnp.ndarray:
+    """(B, L) code patterns -> (steps, B) int32 backward-order symbols."""
+    j = plen[None, :].astype(jnp.int32) - 1 - jnp.arange(
+        steps, dtype=jnp.int32)[:, None]
+    valid = j >= 0
+    jc = jnp.clip(j, 0, patt.shape[1] - 1)
+    sym = jnp.take_along_axis(patt, jc.T, axis=1).T.astype(jnp.int32)
+    return jnp.where(valid, sym, -1)
+
+
+# ---------------------------------------------------------------------------
+# backward search — jnp oracle (and the non-DNA production path)
+# ---------------------------------------------------------------------------
+def search_syms(fa: FMArrays, syms: jnp.ndarray):
+    """Backward search over a (steps, B) symbol plan -> (lo, hi) int32
+    rows of SA$: matches occupy rows [lo, hi), count = hi - lo,
+    first_rank (real SA) = lo - 1."""
+    B = syms.shape[1]
+    rows = fa.n.astype(jnp.int32) + 1
+    lo0 = jnp.zeros((B,), jnp.int32)
+    hi0 = jnp.full((B,), 1, jnp.int32) * rows
+
+    def body(t, carry):
+        lo, hi = carry
+        s = lax.dynamic_slice_in_dim(syms, t, 1, axis=0)[0]
+        active = s >= 0
+        known = s < fa.vocab            # symbol outside the text's alphabet
+        sc = jnp.clip(s, 0, fa.vocab - 1)
+        lo2 = jnp.take(fa.cc, sc) + rank(fa, sc, lo)
+        hi2 = jnp.take(fa.cc, sc) + rank(fa, sc, hi)
+        hi2 = jnp.where(known, hi2, lo2)                # unknown: empty run
+        lo = jnp.where(active, lo2, lo)
+        hi = jnp.where(active, hi2, hi)
+        return lo, hi
+
+    return lax.fori_loop(0, syms.shape[0], body, (lo0, hi0))
+
+
+def backward_search(fa: FMArrays, patt, plen):
+    """Count-path entry: encoded batch -> (lo, hi) SA$ rows."""
+    if fa.is_dna:
+        steps = patt.shape[1] * 16
+        syms = syms_from_packed(patt, plen, steps)
+    else:
+        steps = patt.shape[1]
+        syms = syms_from_codes(patt, plen, steps)
+    return search_syms(fa, syms)
+
+
+# ---------------------------------------------------------------------------
+# LF walk — locate()'s device-side primitive (used for first_pos)
+# ---------------------------------------------------------------------------
+def _bwt_symbol(fa: FMArrays, r):
+    if fa.is_dna:
+        w = jnp.take(fa.bwt, r // 16)
+        return ((w >> (30 - 2 * (r % 16)).astype(jnp.uint32))
+                & jnp.uint32(3)).astype(jnp.int32)
+    return jnp.take(fa.bwt, r).astype(jnp.int32)
+
+
+def lf_walk(fa: FMArrays, rows):
+    """Text positions of SA$ rows via sampled-SA LF walks, (B,) int32.
+    Every walk stops within ``sample_rate`` steps (position 0 is always
+    marked, so a walk never crosses the sentinel)."""
+    r = jnp.asarray(rows, jnp.int32)
+
+    def sample_pos(rr):
+        w = jnp.take(fa.marked, rr // 32)
+        lowmask = (jnp.uint32(1) << (rr % 32).astype(jnp.uint32)) - 1
+        idx = (jnp.take(fa.marked_rank, rr // 32)
+               + lax.population_count(w & lowmask).astype(jnp.int32))
+        return jnp.take(fa.samples, idx)
+
+    def body(_, carry):
+        r, steps, pos, done = carry
+        w = jnp.take(fa.marked, r // 32)
+        hit = (((w >> (r % 32).astype(jnp.uint32)) & jnp.uint32(1)) != 0)
+        stop = hit & ~done
+        pos = jnp.where(stop, sample_pos(r) + steps, pos)
+        done = done | stop
+        s = _bwt_symbol(fa, r)
+        r2 = jnp.take(fa.cc, s) + rank(fa, s, r)
+        r = jnp.where(done, r, r2)
+        steps = jnp.where(done, steps, steps + 1)
+        return r, steps, pos, done
+
+    init = (r, jnp.zeros_like(r), jnp.full_like(r, -1),
+            jnp.zeros(r.shape, bool))
+    _, _, pos, _ = lax.fori_loop(0, fa.sample_rate + 1, body, init)
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel (packed DNA): the backward search as a blocked launch
+# ---------------------------------------------------------------------------
+def _fm_kernel(syms_ref, bwt_ref, occ_ref, meta_ref, lo_ref, hi_ref,
+               *, steps: int):
+    syms = syms_ref[...]                    # (steps, BLOCK_Q) int32
+    bwt = bwt_ref[0]                        # (Wb,) uint32
+    occ_flat = occ_ref[...].reshape(-1)     # (nblk1 * 4,) int32
+    meta = meta_ref[0]                      # (8,) int32
+    cc = meta[:4]
+    sent = meta[4]
+    rows = meta[5]
+    B = syms.shape[1]
+    lo0 = jnp.zeros((B,), jnp.int32)
+    hi0 = jnp.full((B,), 1, jnp.int32) * rows
+
+    def body(t, carry):
+        lo, hi = carry
+        s = lax.dynamic_slice_in_dim(syms, t, 1, axis=0)[0]
+        active = s >= 0
+        sc = jnp.clip(s, 0, 3)
+        lo2 = jnp.take(cc, sc) + _rank_packed(bwt, occ_flat, sent, sc, lo)
+        hi2 = jnp.take(cc, sc) + _rank_packed(bwt, occ_flat, sent, sc, hi)
+        lo = jnp.where(active, lo2, lo)
+        hi = jnp.where(active, hi2, hi)
+        return lo, hi
+
+    lo, hi = lax.fori_loop(0, steps, body, (lo0, hi0))
+    lo_ref[0, :] = lo
+    hi_ref[0, :] = hi
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fm_scan_pallas(syms: jnp.ndarray, bwt: jnp.ndarray, occ: jnp.ndarray,
+                   meta: jnp.ndarray, *, interpret: bool = False):
+    """syms: (steps, BQtot) int32 backward-order symbol plan (-1 =
+    inactive; BQtot % BLOCK_Q == 0 — caller pads); bwt: (Wb,) uint32
+    packed BWT; occ: (nblk + 1, 4) int32 checkpoints; meta: (8,) int32
+    ``[C0..C3, sent_row, rows, 0, 0]``.  Returns (lo, hi) int32
+    (BQtot,).  The whole index stays resident across the query grid —
+    at 64 symbols/checkpoint a 1 Mbase BWT is ~0.6 MB."""
+    steps, BQ = syms.shape
+    assert BQ % BLOCK_Q == 0
+    grid = (BQ // BLOCK_Q,)
+    kernel = functools.partial(_fm_kernel, steps=steps)
+    lo, hi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((steps, BLOCK_Q), lambda q: (0, q)),
+            pl.BlockSpec((1, bwt.shape[0]), lambda q: (0, 0)),
+            pl.BlockSpec(occ.shape, lambda q: (0, 0)),
+            pl.BlockSpec((1, 8), lambda q: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, BLOCK_Q), lambda q: (0, q))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((1, BQ), jnp.int32)] * 2,
+        interpret=interpret,
+    )(syms, bwt[None, :], occ, meta[None, :])
+    return lo[0], hi[0]
+
+
+def pallas_meta(fa: FMArrays) -> jnp.ndarray:
+    """The (8,) int32 scalar block ``fm_scan_pallas`` wants."""
+    meta = jnp.zeros((8,), jnp.int32)
+    meta = meta.at[:4].set(fa.cc.astype(jnp.int32))
+    meta = meta.at[4].set(fa.sent_row.astype(jnp.int32))
+    meta = meta.at[5].set(fa.n.astype(jnp.int32) + 1)
+    return meta
+
+
+def finish_match(fa: FMArrays, lo, hi):
+    """(lo, hi) -> (found, count, first_rank, first_pos) int32, matching
+    the binary-search path's conventions exactly: ``first_rank`` is the
+    real-SA lower-bound row ``lo - 1`` when found and -1 otherwise;
+    ``first_pos`` is the matched run's first text position in suffix-rank
+    order (one LF walk), -1 when not found."""
+    count = hi - lo
+    found = count > 0
+    first_rank = jnp.where(found, lo - 1, -1)
+    pos = lf_walk(fa, jnp.clip(lo, 1, fa.n))
+    first_pos = jnp.where(found, pos, -1)
+    return found, count.astype(jnp.int32), first_rank.astype(jnp.int32), \
+        first_pos.astype(jnp.int32)

@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.core import codec
 from repro.core import query as _q
+from repro.kernels import fm_scan as _fm
 from repro.kernels import pack2bit as _pk
 from repro.kernels import pattern_scan as _ps
 from repro.kernels import tablet_scan as _ts
@@ -132,3 +133,30 @@ def fused_single(store, stack, patterns, plen):
         base, tiers = _tier.fused_table_scan(store, stack, patterns, plen)
     merged = _tier.merge_tier_results(base, tiers[0], tiers[3])
     return merged, base, tiers
+
+
+@jax.jit
+def fm_search(arrays, patterns, plen):
+    """Frozen-tier base read: FM backward search + one LF walk for
+    ``first_pos``, a single jitted launch.  Same MatchResult contract as
+    ``query`` with one widening: ``first_rank`` is the real-SA lower
+    bound for EVERY query (found or not) — ``merge_tier_results`` only
+    reads it through a ``count > 0`` guard, so the paths stay
+    bit-identical where it matters.  Packed-DNA batches take the Pallas
+    kernel on TPU; everything else runs the jnp oracle."""
+    if arrays.is_dna and patterns.dtype == jnp.uint32:
+        syms = _fm.syms_from_packed(patterns, plen, patterns.shape[1] * 16)
+    else:
+        syms = _fm.syms_from_codes(patterns, plen, patterns.shape[1])
+    if (not _interpret()) and arrays.is_dna \
+            and patterns.dtype == jnp.uint32:
+        padded, B = _pad_to(syms, _fm.BLOCK_Q, 1, fill=-1)
+        lo, hi = _fm.fm_scan_pallas(padded, arrays.bwt, arrays.occ,
+                                    _fm.pallas_meta(arrays),
+                                    interpret=False)
+        lo, hi = lo[:B], hi[:B]
+    else:
+        lo, hi = _fm.search_syms(arrays, syms)
+    found, count, first_rank, first_pos = _fm.finish_match(arrays, lo, hi)
+    return _q.MatchResult(found=found, count=count,
+                          first_rank=first_rank, first_pos=first_pos)

@@ -58,6 +58,14 @@ def main(argv=None):
     ap.add_argument("--max-runs", type=int, default=None,
                     help="fold runs into the base (major compaction, "
                          "merge-based) once this many are live")
+    ap.add_argument("--fm-threshold", type=int, default=None,
+                    help="freeze the base tier onto the compressed "
+                         "FM-index once it reaches this many symbols "
+                         "(docs/storage_tiers.md); major compactions "
+                         "re-freeze automatically")
+    ap.add_argument("--freeze", action="store_true",
+                    help="freeze the main table explicitly right after "
+                         "build/open (one-shot --fm-threshold)")
     ap.add_argument("--wal", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="write-ahead commit log for persistent tables: "
@@ -78,7 +86,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     n_dev = len(jax.devices())
-    lsm = {"memtable_limit": args.memtable_limit, "max_runs": args.max_runs}
+    lsm = {"memtable_limit": args.memtable_limit, "max_runs": args.max_runs,
+           "fm_threshold": args.fm_threshold}
     # durability knobs only make sense with a root (in-memory tables have
     # no log); open_kw reach every table this handle opens from disk — the
     # reopen path must honor --capacity-factor just like create does
@@ -117,6 +126,13 @@ def main(argv=None):
         dt = time.time() - t0
         print(f"[build] done in {dt:.1f}s "
               f"({args.text_len / max(dt, 1e-9) / 1e6:.2f} Mbase/s)")
+
+    if args.freeze and not table.is_frozen:
+        t1 = time.time()
+        db.freeze(args.table)
+        rb = table.stats()["tiers"]["resident_bytes"]
+        print(f"[freeze] base tier -> FM-index in {time.time() - t1:.1f}s "
+              f"(fm={rb['fm']}B, base_sa={rb['base_sa']}B)")
 
     # clamp to the table's pattern cap: run_workload validates up front
     max_pattern = min(args.max_pattern, table.max_query_len)
@@ -201,6 +217,11 @@ def main(argv=None):
           f"runs={st['tiers']['run_count']} "
           f"run_rows={st['tiers']['run_rows']} "
           f"memtable={st['tiers']['memtable_rows']}")
+    rb = st["tiers"]["resident_bytes"]
+    print(f"[bytes ] frozen={st['tiers']['frozen']} "
+          f"base_sa={rb['base_sa']} fm={rb['fm']} "
+          f"runs={rb['runs']} memtable={rb['memtable']} "
+          f"text_device={rb['text_device']}")
     print(f"[cache ] entries={st['cache']['entries']} "
           f"hits={st['cache']['hits']} misses={st['cache']['misses']} "
           f"generation={st['cache']['generation']}")

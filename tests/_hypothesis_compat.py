@@ -53,6 +53,11 @@ class _Strategies:
         return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
     @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
     def lists(elements: _Strategy, min_size: int = 0,
               max_size: int = 10) -> _Strategy:
         def draw(rng):

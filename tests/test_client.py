@@ -370,7 +370,10 @@ def test_stats_schema_is_stable_and_documented():
     assert set(s) == {"name", "version", "is_dna", "max_query_len",
                       "tiers", "cache", "planner", "wal"}
     assert set(s["tiers"]) == {"base_rows", "run_count", "run_rows",
-                               "memtable_rows"}
+                               "memtable_rows", "frozen", "resident_bytes"}
+    assert s["tiers"]["frozen"] is False       # no freeze() here
+    assert set(s["tiers"]["resident_bytes"]) == {
+        "base_sa", "fm", "text_device", "runs", "memtable", "text_host"}
     assert set(s["cache"]) == {"entries", "hits", "misses", "generation"}
     assert set(s["wal"]) == {"enabled", "seq", "log", "recovery"}
     assert s["wal"]["enabled"] is False      # in-memory table: no log

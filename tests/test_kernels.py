@@ -114,3 +114,53 @@ def test_tier_scan_kernel_vs_ref_vs_fused(nq, base_n, chunks):
                           rref, want):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
                                       err_msg="ref:" + name)
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack round trips (host batch path feeds the FM-index Occ builder)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,L", [(1, 1), (3, 15), (2, 16), (5, 17), (4, 33)])
+def test_unpack_2bit_batch_round_trip(B, L):
+    rng = np.random.default_rng(B * 100 + L)
+    codes = rng.integers(0, 4, size=(B, L)).astype(np.uint8)
+    words = codec.pack_2bit_batch(codes)
+    assert words.dtype == np.uint32
+    got = codec.unpack_2bit_batch(words, L)
+    np.testing.assert_array_equal(got, codes)
+    # agrees with the jnp single-row unpack on every row
+    for b in range(B):
+        np.testing.assert_array_equal(
+            np.asarray(codec.unpack_2bit(jnp.asarray(words[b]), L)),
+            codes[b])
+    # asking for more bases than the words hold is an error, not junk
+    with pytest.raises(ValueError):
+        codec.unpack_2bit_batch(words, words.shape[1] * 16 + 1)
+
+
+# ---------------------------------------------------------------------------
+# FM backward-search kernel vs the jnp oracle vs brute force
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,nq", [(130, 40), (2048, 200)])
+def test_fm_scan_pallas_matches_oracle(n, nq):
+    from repro.api.fm import FMIndex
+    from repro.kernels import fm_scan as FM
+
+    codes = random_dna(n, seed=n)
+    fm = FMIndex.build(codes, None, is_dna=True, sample_rate=8)
+    pats = Q.random_patterns(nq, 1, 12, seed=nq)
+    _, pp, pl = Q.encode_patterns(pats, 16)
+    syms = FM.syms_from_packed(pp, pl, pp.shape[1] * 16)
+    lo_o, hi_o = FM.search_syms(fm.arrays, syms)        # jnp oracle
+
+    padded, B = ops._pad_to(syms, FM.BLOCK_Q, 1, fill=-1)
+    lo_k, hi_k = FM.fm_scan_pallas(padded, fm.arrays.bwt, fm.arrays.occ,
+                                   FM.pallas_meta(fm.arrays),
+                                   interpret=True)      # Pallas kernel
+    np.testing.assert_array_equal(np.asarray(lo_k)[:B], np.asarray(lo_o))
+    np.testing.assert_array_equal(np.asarray(hi_k)[:B], np.asarray(hi_o))
+
+    cc = np.asarray(codes).astype(np.int32)
+    count = np.asarray(hi_o) - np.asarray(lo_o)
+    for i, p in enumerate(pats):
+        want, _ = Q.brute_force_count(cc, codec.encode_dna(p).astype(np.int32))
+        assert int(count[i]) == want, p

@@ -75,6 +75,36 @@ def test_serve_clamps_max_pattern(capsys):
     assert "[clamp ]" in out and "-> 128" in out
 
 
+def test_serve_freeze_flags_and_bytes_line(tmp_path, capsys):
+    """--freeze routes the whole workload through the frozen FM tier and
+    the [bytes ] stats line reports the per-tier residency shift."""
+    serve.main(TINY + ["--freeze"])
+    out = capsys.readouterr().out
+    assert "[freeze]" in out
+    bl = next(ln for ln in out.splitlines() if ln.startswith("[bytes ]"))
+    assert "frozen=True" in bl and "base_sa=0" in bl
+    fm_bytes = int(bl.split("fm=")[1].split()[0])
+    assert fm_bytes > 0
+    assert "'fm':" in out                      # planner ran in fm mode
+
+    # --fm-threshold persists: auto-freeze at create, still frozen and
+    # serving after reopen (artifact reload, no rebuild)
+    root = str(tmp_path / "root")
+    args = TINY + ["--root", root, "--fm-threshold", "1000"]
+    serve.main(args)
+    first = capsys.readouterr().out
+    assert "[build]" in first and "frozen=True" in first
+    assert os.path.isdir(os.path.join(root, "dna_serve", "fm"))
+    serve.main(args)
+    second = capsys.readouterr().out
+    assert "[open ]" in second and "frozen=True" in second
+
+    # without the flags the live path is untouched
+    serve.main(TINY)
+    plain = capsys.readouterr().out
+    assert "frozen=False" in plain and "[freeze]" not in plain
+
+
 def test_serve_locate_rows_are_real_positions(capsys):
     serve.main(TINY)
     out = capsys.readouterr().out

@@ -10,8 +10,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import client_bench, compaction_bench, fm_bench, \
-        kernel_bench, paper_tables, roofline, table_bench, wal_bench
+    from benchmarks import build_bench, client_bench, compaction_bench, \
+        fm_bench, kernel_bench, paper_tables, roofline, table_bench, \
+        wal_bench
 
     benches = [
         ("table1_preprocess_build", paper_tables.bench_build_table1),
@@ -28,6 +29,7 @@ def main() -> None:
         ("fm_frozen_tier", fm_bench.bench_fm),
         ("client_coalescing", client_bench.bench_client),
         ("wal_group_commit", wal_bench.bench_wal),
+        ("staged_build", build_bench.bench_build),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

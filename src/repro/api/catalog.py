@@ -25,11 +25,41 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import tempfile
 from typing import Optional
 
 from repro.api.table import SuffixTable, _check_name, default_root
+
+_STEP_RE = re.compile(r"step_(\d+)")
+
+
+def _has_snapshot(table_dir: str) -> bool:
+    """True iff ``table_dir`` holds at least one PUBLISHED snapshot (a
+    ``step_*`` dir with its meta.json — the same test as
+    ``CheckpointManager.all_steps``, without the ctor's mkdir)."""
+    if not os.path.isdir(table_dir):
+        return False
+    for entry in os.listdir(table_dir):
+        if _STEP_RE.fullmatch(entry) and os.path.exists(
+                os.path.join(table_dir, entry, "meta.json")):
+            return True
+    return False
+
+
+def _is_table_remnant(table_dir: str) -> bool:
+    """True iff every entry of ``table_dir`` is table machinery — step
+    dirs (published or ``.tmp`` partial streams), ``wal/``, ``fm/``.  The
+    guard that keeps reconcile from deleting an unrelated directory (a
+    user's spill dir, say) that merely lives under the catalog root."""
+    for entry in os.listdir(table_dir):
+        if entry in ("wal", "fm"):
+            continue
+        if _STEP_RE.fullmatch(entry.removesuffix(".tmp")):
+            continue
+        return False
+    return True
 
 
 def table_wal_dir(root: str, name: str) -> str:
@@ -48,9 +78,63 @@ def table_fm_dir(root: str, name: str) -> str:
 class Catalog:
     """Named-table registry over one root directory."""
 
-    def __init__(self, root: Optional[str] = None):
+    def __init__(self, root: Optional[str] = None, *,
+                 reconcile: bool = True):
         self.root = root or default_root()
         os.makedirs(self.root, exist_ok=True)
+        if reconcile:
+            self.reconcile()
+
+    def reconcile(self) -> list[str]:
+        """Garbage-collect crashed-create remnants; returns the names
+        removed.  Three cases (docs/build_pipeline.md, "Crash safety"):
+
+        * a REGISTERED table with no published snapshot — a create
+          (including the staged shard-streaming path) died between
+          ``register`` and the atomic publish: its entry and directory
+          (holding at most a ``step_*.tmp`` partial stream, a wal/, an
+          empty fm/) are removed;
+        * an UNREGISTERED directory with no published snapshot whose
+          contents are all table machinery (step dirs / .tmp stages /
+          wal/ / fm/) — a pre-register crash: removed.  A directory
+          holding anything else is NOT touched — it is the user's, not a
+          remnant;
+        * a stale ``step_*.tmp`` staging dir inside an otherwise healthy
+          table — a crashed re-publish (flush/compact): just the .tmp is
+          removed, the table survives.
+
+        Directories with a published snapshot but no catalog entry (a
+        crashed ``drop_table``) are left for ``drop_table`` to finish —
+        they hold real data, so an open-time GC must not guess."""
+        removed: list[str] = []
+        data = self.load()
+        dirty = False
+        for name in list(data["tables"]):
+            table_dir = os.path.join(self.root, name)
+            if not _has_snapshot(table_dir):
+                shutil.rmtree(table_dir, ignore_errors=True)
+                del data["tables"][name]
+                dirty = True
+                removed.append(name)
+        if dirty:
+            self._write(data)
+        for entry in os.listdir(self.root):
+            path = os.path.join(self.root, entry)
+            if not os.path.isdir(path):
+                continue
+            if (entry in data["tables"] or _has_snapshot(path)
+                    or not _is_table_remnant(path)):
+                # healthy (or data-bearing orphan, or not ours at all):
+                # drop only stale .tmp stages left by a crashed republish
+                for sub in os.listdir(path):
+                    if sub.endswith(".tmp") and \
+                            _STEP_RE.fullmatch(sub.removesuffix(".tmp")):
+                        shutil.rmtree(os.path.join(path, sub),
+                                      ignore_errors=True)
+                continue
+            shutil.rmtree(path, ignore_errors=True)
+            removed.append(entry)
+        return removed
 
     # -- the metadata file ---------------------------------------------------
     @property

@@ -46,12 +46,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import time
+
 from repro.api.compaction import merge_delta_sa
 from repro.api.memtable import Memtable
 from repro.api.runs import Run, TierSet, logical_tail
 from repro.api.wal import WriteAheadLog
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import codec
+from repro.core.build_pipeline import BuildStats, chunk_rows_for_budget, \
+    in_memory_build_stats, staged_suffix_array
 from repro.core.planner import ScanOutcome, ScanPlanner, TopKCache
 from repro.core.query import MatchResult
 from repro.core.suffix_array import build_suffix_array
@@ -182,6 +186,9 @@ class SuffixTable:
         self._wal_seq = 0            # seq of the last logged/applied append
         self._recovery: Optional[dict] = None
         self._replaying = False
+        # construction telemetry (stats()["build"]); set by create()/
+        # from_codes()/open(), persisted across versions
+        self._build: Optional[BuildStats] = None
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -190,8 +197,12 @@ class SuffixTable:
         """In-memory table (no persistence): build over ``codes`` now,
         distributed over the local mesh when >1 device is visible."""
         codes, is_dna = _as_codes(codes, is_dna)
-        table = cls(codes, cls._build_sa_for(codes, max_query_len, is_dna),
-                    is_dna=is_dna, max_query_len=max_query_len, **kw)
+        t0 = time.perf_counter()
+        sa = cls._build_sa_for(codes, max_query_len, is_dna)
+        table = cls(codes, sa, is_dna=is_dna,
+                    max_query_len=max_query_len, **kw)
+        table._build = in_memory_build_stats(
+            len(codes), time.perf_counter() - t0)
         table._maybe_freeze()
         return table
 
@@ -213,15 +224,31 @@ class SuffixTable:
     @classmethod
     def create(cls, name: str, codes, *, root: Optional[str] = None,
                is_dna: Optional[bool] = None, max_query_len: int = 128,
-               overwrite: bool = False, **kw) -> "SuffixTable":
+               overwrite: bool = False, staged: Optional[bool] = None,
+               max_device_bytes: Optional[int] = None,
+               spill_dir: Optional[str] = None,
+               build_chunk_rows: Optional[int] = None,
+               shard_rows: Optional[int] = None, **kw) -> "SuffixTable":
         """Build AND persist version 1 of a named table under ``root``,
         registering it in the root's :class:`Catalog`.
 
+        Two build paths, bit-identical results (docs/build_pipeline.md):
+        the default in-memory builder, and — when ``staged=True`` or any
+        of ``max_device_bytes`` / ``spill_dir`` / ``build_chunk_rows`` is
+        given — the out-of-core staged pipeline, which sorts in
+        device-budgeted chunks, spills working state to host RAM or
+        ``spill_dir``, and streams finished SA shards of ``shard_rows``
+        rows straight into the snapshot (register -> stream shards ->
+        publish atomically), so the full array is never resident during
+        construction.
+
         Crash-safe ordering: the catalog entry is written BEFORE the
-        snapshot, so a create that dies mid-persist leaves a *visible*
-        registered-but-empty table rather than an invisible orphan
-        directory; a later ``create`` of the same name reconciles such
-        remnants (no published snapshot) instead of refusing."""
+        snapshot, so a create that dies mid-persist (or mid-shard-stream)
+        leaves a *visible* registered-but-empty table rather than an
+        invisible orphan directory; ``Catalog.reconcile`` (run on every
+        catalog open) and a later ``create`` of the same name both
+        garbage-collect such remnants (no published snapshot) instead of
+        refusing."""
         import shutil
         from repro.api.catalog import Catalog
         _check_name(name)
@@ -242,15 +269,73 @@ class SuffixTable:
             # shadow (or GC) the fresh version-1 save below
             shutil.rmtree(table_dir, ignore_errors=True)
         codes, is_dna = _as_codes(codes, is_dna)
-        table = cls(codes, cls._build_sa_for(codes, max_query_len, is_dna),
-                    is_dna=is_dna, max_query_len=max_query_len,
+        if staged is None:
+            staged = (max_device_bytes is not None or spill_dir is not None
+                      or build_chunk_rows is not None)
+        if staged:
+            return cls._create_staged(
+                name, codes, root=root, catalog=catalog, is_dna=is_dna,
+                max_query_len=max_query_len,
+                max_device_bytes=max_device_bytes, spill_dir=spill_dir,
+                build_chunk_rows=build_chunk_rows, shard_rows=shard_rows,
+                **kw)
+        t0 = time.perf_counter()
+        sa = cls._build_sa_for(codes, max_query_len, is_dna)
+        table = cls(codes, sa, is_dna=is_dna, max_query_len=max_query_len,
                     name=name, root=root, version=1, **kw)
+        table._build = in_memory_build_stats(
+            len(codes), time.perf_counter() - t0)
         catalog.register(name, {"is_dna": table.is_dna,
                                 "max_query_len": table.max_query_len})
         table._persist()
         table._maybe_freeze()       # fm_threshold policy; re-persists frozen
         table._open_wal(fresh=True)
         return table
+
+    @classmethod
+    def _create_staged(cls, name: str, codes: np.ndarray, *, root: str,
+                       catalog, is_dna: bool, max_query_len: int,
+                       max_device_bytes: Optional[int],
+                       spill_dir: Optional[str],
+                       build_chunk_rows: Optional[int],
+                       shard_rows: Optional[int], **kw) -> "SuffixTable":
+        """The out-of-core create: staged chunked build
+        (``core.build_pipeline``) with SA shards streamed into a
+        :class:`~repro.checkpoint.manager.ShardedSave` as they finish,
+        published atomically, then reopened through the normal
+        :meth:`open` path (which re-attaches wal/fm policy)."""
+        chunk_rows = (int(build_chunk_rows) if build_chunk_rows
+                      else chunk_rows_for_budget(max_device_bytes))
+        if shard_rows is None:
+            shard_rows = chunk_rows
+        n_dev = len(jax.devices())
+        mesh = make_tablet_mesh(n_dev) if n_dev > 1 else None
+        mgr = CheckpointManager(os.path.join(root, name),
+                                keep_n=int(kw.get("keep_n", 3)))
+        catalog.register(name, {"is_dna": is_dna,
+                                "max_query_len": max_query_len})
+        stage = mgr.stage_sharded(1)
+        try:
+            _, stats = staged_suffix_array(
+                codes, chunk_rows=chunk_rows,
+                max_device_bytes=max_device_bytes, spill_dir=spill_dir,
+                mesh=mesh, axis_name="tablets", shard_rows=shard_rows,
+                emit_shard=lambda i, blk: stage.add_shard("sa_real", i,
+                                                          blk))
+            if "sa_real" not in stage._shards:   # empty corpus: no shards
+                stage.add_shard("sa_real", 0, np.zeros((0,), np.int32))
+            state = {"codes": codes,
+                     "mem_codes": np.zeros((0,), codes.dtype)}
+            extra = {"kind": "suffix_table", "name": name, "version": 1,
+                     "is_dna": is_dna, "max_query_len": max_query_len,
+                     "n_base": int(len(codes)), "runs": [], "mem_len": 0,
+                     "wal_seq": 0, "frozen": False, "fm_sample_rate": None,
+                     "build": stats.to_dict()}
+            stage.commit(state, extra)
+        except BaseException:
+            stage.abort()
+            raise
+        return cls.open(name, root=root, **kw)
 
     @classmethod
     def open(cls, name: str, *, root: Optional[str] = None,
@@ -289,6 +374,8 @@ class SuffixTable:
                     max_query_len=int(extra["max_query_len"]),
                     name=name, root=root, version=int(extra["version"]),
                     _fm=fm, **kw)
+        if extra.get("build"):
+            table._build = BuildStats.from_dict(extra["build"])
         for i, rm in enumerate(extra.get("runs", [])):
             table.runs.append(Run.restore(
                 arrays[f"run{i}_tail"], arrays[f"run{i}_codes"],
@@ -325,8 +412,8 @@ class SuffixTable:
         planner is re-bound IN PLACE (not replaced): captured references
         — the serving engine holds one — keep serving the post-compaction
         text, and accumulated planner stats survive."""
-        p = 1 if self.mesh is None else int(
-            np.prod([self.mesh.shape[a] for a in self.mesh.axis_names]))
+        from repro.distributed.sharding import mesh_axis_size
+        p = mesh_axis_size(self.mesh)
         self.store = store_from_arrays(
             codes, sa_real, is_dna=self.is_dna,
             max_query_len=self.max_query_len, num_tablets=p)
@@ -418,6 +505,13 @@ class SuffixTable:
           read-path counters ``fused_batches`` / ``base_only_batches``
           / ``tier_reads`` (docs/read_path.md).  (True cross-caller
           coalescing counters live in ``Database.stats()["scheduler"]``.)
+        * ``build`` — how the base index was constructed (``None`` for
+          adopted stores): ``mode`` (``"staged"``/``"in_memory"``),
+          ``rounds``, ``n_chunks``, ``chunk_rows``,
+          ``peak_device_bytes``, ``spill_bytes``, ``elapsed_s``,
+          ``bases_per_s`` — the :class:`~repro.core.build_pipeline.
+          BuildStats` schema, persisted with the table
+          (docs/build_pipeline.md);
         * ``wal`` — durability: ``enabled``, ``seq`` (last append's
           commit sequence), ``log`` (appends/fsyncs/seals counters, or
           ``None`` with no log), and ``recovery`` — ``None`` on a clean
@@ -445,6 +539,8 @@ class SuffixTable:
                 "misses": self._cache.misses,
                 "generation": self._cache.generation,
             },
+            "build": (self._build.to_dict() if self._build is not None
+                      else None),
             "planner": self.planner.stats.as_dict(),
             "wal": {
                 "enabled": self._wal is not None,
@@ -1012,7 +1108,9 @@ class SuffixTable:
                  "wal_seq": self._wal_seq,
                  "frozen": self.fm is not None,
                  "fm_sample_rate": (self.fm.sample_rate
-                                    if self.fm is not None else None)}
+                                    if self.fm is not None else None),
+                 "build": (self._build.to_dict()
+                           if self._build is not None else None)}
         # always publish under a FRESH step: CheckpointManager.save on an
         # existing step rmtree's it before the rename, so re-publishing
         # the same version in place (flush / every automatic seal) would

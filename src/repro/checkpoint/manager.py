@@ -9,6 +9,13 @@
   per-host shard files + a reshard-on-load pass; single-process here.
 * Data-iterator state (just the step for our deterministic pipeline) rides
   in the metadata.
+* Shard-streaming saves (:meth:`CheckpointManager.stage_sharded`): large
+  arrays may be streamed into the staged ``step_XXXX.tmp`` dir one shard
+  file at a time and published with the same single ``os.rename`` — the
+  out-of-core table build (docs/build_pipeline.md) emits suffix-array
+  shards as rounds finish without ever holding the whole array.  A crash
+  mid-stream leaves only a ``.tmp`` dir, which ``all_steps()`` ignores and
+  ``Catalog.reconcile`` garbage-collects.
 """
 from __future__ import annotations
 
@@ -28,11 +35,80 @@ def _flatten(tree):
     return [(jax.tree_util.keystr(p), x) for p, x in flat], treedef
 
 
+class ShardedSave:
+    """One in-flight shard-streaming save: register -> stream shards ->
+    publish atomically.
+
+    Created by :meth:`CheckpointManager.stage_sharded`.  Shards of a named
+    array are appended in order with :meth:`add_shard`; :meth:`commit`
+    writes the remaining (small) state tree plus metadata and publishes
+    the whole step with one rename.  Until then nothing is visible:
+    ``all_steps()`` skips ``.tmp`` dirs, so a kill at ANY shard boundary
+    leaves the previous published version untouched and the partial
+    stream reclaimable (``Catalog.reconcile``)."""
+
+    def __init__(self, manager: "CheckpointManager", step: int):
+        self.manager = manager
+        self.step = int(step)
+        self.final = os.path.join(manager.dir, f"step_{step:010d}")
+        self.tmp = self.final + ".tmp"
+        if os.path.exists(self.tmp):
+            shutil.rmtree(self.tmp)
+        os.makedirs(self.tmp)
+        self._shards: dict[str, dict] = {}
+        self._done = False
+
+    def add_shard(self, name: str, i: int, arr) -> str:
+        """Stream shard ``i`` of array ``name`` (must arrive in order)."""
+        if self._done:
+            raise RuntimeError("ShardedSave already committed/aborted")
+        ent = self._shards.setdefault(name, {"count": 0, "dtype": None})
+        if i != ent["count"]:
+            raise ValueError(f"shard {i} of {name!r} out of order "
+                             f"(expected {ent['count']})")
+        arr = np.asarray(jax.device_get(arr))
+        np.save(os.path.join(self.tmp, f"shard_{name}_{i:06d}.npy"), arr)
+        ent["count"] += 1
+        ent["dtype"] = arr.dtype.name
+        return f"shard_{name}_{i:06d}.npy"
+
+    def commit(self, state: Any, extra: Optional[dict] = None) -> str:
+        """Write the non-sharded state + metadata and publish the step.
+        Sharded arrays come back from ``restore_arrays`` stitched under
+        their plain name, exactly like ``save``'d leaves."""
+        flat, _ = _flatten(state)
+        arrays = {f"a{i}": np.asarray(jax.device_get(x))
+                  for i, (_, x) in enumerate(flat)}
+        meta = {"step": self.step,
+                "paths": [p for p, _ in flat],
+                "shards": self._shards,
+                "extra": extra or {}}
+        np.savez(os.path.join(self.tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(self.tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(self.final):
+            shutil.rmtree(self.final)
+        os.rename(self.tmp, self.final)          # atomic publish
+        self._done = True
+        self.manager._gc()
+        return self.final
+
+    def abort(self) -> None:
+        """Discard the staged shards (graceful-failure path; a hard kill
+        leaves the same end state via reconcile)."""
+        self._done = True
+        shutil.rmtree(self.tmp, ignore_errors=True)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep_n: int = 3):
         self.dir = directory
         self.keep_n = keep_n
         os.makedirs(directory, exist_ok=True)
+
+    def stage_sharded(self, step: int) -> ShardedSave:
+        """Open a shard-streaming save of ``step`` (see ShardedSave)."""
+        return ShardedSave(self, step)
 
     # -------------------------------------------------------------- save
     def save(self, step: int, state: Any, extra: Optional[dict] = None):
@@ -85,6 +161,12 @@ class CheckpointManager:
             meta = json.load(f)
         data = np.load(os.path.join(path, "arrays.npz"))
         arrays = {p: data[f"a{i}"] for i, p in enumerate(meta["paths"])}
+        for name, ent in meta.get("shards", {}).items():
+            parts = [np.load(os.path.join(path, f"shard_{name}_{i:06d}.npy"))
+                     for i in range(ent["count"])]
+            arrays[f"['{name}']"] = (
+                np.concatenate(parts) if parts
+                else np.zeros((0,), np.dtype(ent["dtype"] or "int32")))
         return arrays, meta["extra"]
 
     def restore(self, step: int, like: Any, shardings: Any = None):

@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core.dsort import (bitonic_sort_sharded, sample_sort_sharded,
                               sort_sharded_auto)
+from repro.distributed.sharding import mesh_axis_size
 
 
 def _axis_size(axis_name) -> int:
@@ -114,11 +115,28 @@ def build_suffix_array_sharded(codes_local, *, n_real: int, axis_name,
     return sa, rank
 
 
+def make_superchunk_sorter(mesh, axis_name: str, method: str = "sample"):
+    """Jitted mesh sort of one (key, nxt, idx) super-chunk for the staged
+    build (``repro.core.build_pipeline``).  All three operands are int32
+    of equal length divisible by the axis size; rows sort ascending by the
+    full triple (idx last forces deterministic ties, so the result matches
+    a stable 2-key sort of text-ordered rows bit-for-bit)."""
+    spec = P(axis_name)
+
+    @jax.jit
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(spec,) * 3,
+                       out_specs=(spec,) * 3)
+    def run(key, nxt, idx):
+        return _sort((key, nxt, idx), 3, axis_name, method)
+
+    return run
+
+
 def build_suffix_array_distributed(codes: np.ndarray, mesh, axis_name: str,
                                    method: str = "bitonic"):
     """Host-side wrapper: pads, shard_maps, returns (sa_padded, pad_count).
     Real suffix array = sa_padded[pad_count:]."""
-    p = int(np.prod([mesh.shape[a] for a in (axis_name if isinstance(axis_name, tuple) else (axis_name,))]))
+    p = mesh_axis_size(mesh, axis_name)
     n_real = int(len(codes))
     m = int(np.ceil(n_real / p))
     n_pad = m * p

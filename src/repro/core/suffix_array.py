@@ -11,6 +11,10 @@ Three implementations, increasing in scale:
   replaced by a distributed bitonic merge over the mesh (see ``dsort.py``),
   so each device holds only n/p rows — the Accumulo-tablet analogue for
   *construction* (paper §IV pre-processing phase).
+* ``build_suffix_array_staged`` — the out-of-core pipeline
+  (``core/build_pipeline.py``): chunked device sorts, host-RAM/disk spill
+  between rounds, streaming merge — for corpora whose working set exceeds
+  device (or host) memory.  Bit-identical to ``build_suffix_array``.
 """
 from __future__ import annotations
 
@@ -90,6 +94,15 @@ def build_suffix_array(codes) -> jnp.ndarray:
         return jnp.zeros((1,), jnp.int32)
     num_steps = max(1, int(np.ceil(np.log2(n))))
     sa, _ = _build_jit(codes, num_steps)
+    return sa
+
+
+def build_suffix_array_staged(codes, **kw) -> np.ndarray:
+    """Out-of-core build (see ``repro.core.build_pipeline``), returning the
+    assembled SA.  Accepts ``chunk_rows`` / ``max_device_bytes`` /
+    ``spill_dir`` / ``mesh`` etc.; bit-identical to ``build_suffix_array``."""
+    from repro.core.build_pipeline import staged_suffix_array
+    sa, _ = staged_suffix_array(codes, **kw)
     return sa
 
 

@@ -26,6 +26,25 @@ def data_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def mesh_axis_size(mesh: Optional[Mesh], axis_name=None) -> int:
+    """Device count along ``axis_name`` (a name, a tuple of names, or
+    ``None`` for every axis).  ``mesh=None`` means single-device (1).
+
+    The one shared spelling of the "how many shards live on this axis"
+    computation that the tablet store, scan planner, and staged build
+    pipeline all need (previously each re-derived it inline from
+    ``mesh.shape``)."""
+    if mesh is None:
+        return 1
+    if axis_name is None:
+        axes = tuple(mesh.axis_names)
+    elif isinstance(axis_name, tuple):
+        axes = axis_name
+    else:
+        axes = (axis_name,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
 # Role tables: trailing-dims spec templates.  'M' = model axis, 'D' = data
 # (FSDP) axes, None = replicated.  Matched on (enclosing, leaf-name).
 _RULES: list[tuple[str, str, tuple]] = [

@@ -76,6 +76,15 @@ def main(argv=None):
                     help="group-commit window: concurrent client appends "
                          "arriving within this many ms share ONE fsync "
                          "before acking (0 = fsync per append)")
+    ap.add_argument("--max-device-bytes", type=int, default=None,
+                    help="per-device build budget in bytes: create runs "
+                         "the staged out-of-core pipeline (docs/"
+                         "build_pipeline.md) with chunk_rows = budget/24 "
+                         "instead of one in-memory sort (needs --root)")
+    ap.add_argument("--spill-dir", default=None,
+                    help="spill the staged build's working arrays to "
+                         "files under this dir instead of host RAM "
+                         "(implies the staged pipeline; needs --root)")
     ap.add_argument("--root", default=None,
                     help="catalog root dir; omit for an in-memory table")
     ap.add_argument("--table", default="dna_serve",
@@ -115,14 +124,26 @@ def main(argv=None):
         print(f"[build] suffix array over {args.text_len} bases "
               f"({n_dev} device(s)) ...", flush=True)
         codes = random_dna(args.text_len, seed=args.seed)
+        # build-only knobs: they go to create_table ONLY — never into the
+        # Database open_kw, which reach every later open() of the table
+        build_kw = {}
+        if args.max_device_bytes is not None:
+            build_kw["max_device_bytes"] = args.max_device_bytes
+        if args.spill_dir is not None:
+            build_kw["spill_dir"] = args.spill_dir
         if args.root is None:
+            if build_kw:
+                print("[clamp ] --max-device-bytes/--spill-dir need "
+                      "--root (staged builds persist shard-at-a-time); "
+                      "building in-memory")
             table = db.attach(args.table, SuffixTable.from_codes(
                 codes, is_dna=True, capacity_factor=args.capacity_factor,
                 **lsm))
         else:
             table = db.create_table(
                 args.table, codes, is_dna=True,
-                capacity_factor=args.capacity_factor, **lsm, **wal_kw)
+                capacity_factor=args.capacity_factor, **build_kw,
+                **lsm, **wal_kw)
         dt = time.time() - t0
         print(f"[build] done in {dt:.1f}s "
               f"({args.text_len / max(dt, 1e-9) / 1e6:.2f} Mbase/s)")
@@ -217,6 +238,13 @@ def main(argv=None):
           f"runs={st['tiers']['run_count']} "
           f"run_rows={st['tiers']['run_rows']} "
           f"memtable={st['tiers']['memtable_rows']}")
+    b = st["build"]
+    if b is not None:
+        print(f"[build ] mode={b['mode']} rounds={b['rounds']} "
+              f"chunks={b['n_chunks']}x{b['chunk_rows']} "
+              f"peak_device_bytes={b['peak_device_bytes']} "
+              f"spill_bytes={b['spill_bytes']} "
+              f"bases_per_s={b['bases_per_s']:.0f}")
     rb = st["tiers"]["resident_bytes"]
     print(f"[bytes ] frozen={st['tiers']['frozen']} "
           f"base_sa={rb['base_sa']} fm={rb['fm']} "

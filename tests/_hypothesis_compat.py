@@ -53,6 +53,10 @@ class _Strategies:
         return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
     @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
     def sampled_from(elements) -> _Strategy:
         elements = list(elements)
         return _Strategy(lambda rng: rng.choice(elements))

@@ -368,7 +368,12 @@ def test_stats_schema_is_stable_and_documented():
     table.append(codec.random_dna(250, seed=13))   # triggers a seal
     s = table.stats()
     assert set(s) == {"name", "version", "is_dna", "max_query_len",
-                      "tiers", "cache", "planner", "wal"}
+                      "tiers", "cache", "build", "planner", "wal"}
+    assert set(s["build"]) == {"mode", "n_bases", "rounds", "n_chunks",
+                               "chunk_rows", "peak_device_bytes",
+                               "spill_bytes", "elapsed_s", "bases_per_s"}
+    assert s["build"]["mode"] == "in_memory"    # from_codes: one sort
+    assert s["build"]["n_bases"] == 800
     assert set(s["tiers"]) == {"base_rows", "run_count", "run_rows",
                                "memtable_rows", "frozen", "resident_bytes"}
     assert s["tiers"]["frozen"] is False       # no freeze() here

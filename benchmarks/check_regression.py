@@ -67,6 +67,7 @@ def classify(name: str, value) -> str:
         return "lower"
     if (n.endswith("_per_s") or n.endswith("_per_sec")
             or "queries_per_s" in n or "speedup" in n
+            or "scale_factor" in n or "gain" in n
             or n.endswith("_rate")):
         return "higher"
     return "info"

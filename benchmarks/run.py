@@ -11,8 +11,8 @@ import sys
 
 def main() -> None:
     from benchmarks import build_bench, client_bench, compaction_bench, \
-        fm_bench, kernel_bench, paper_tables, roofline, table_bench, \
-        wal_bench
+        fm_bench, kernel_bench, paper_tables, plane_bench, roofline, \
+        table_bench, wal_bench
 
     benches = [
         ("table1_preprocess_build", paper_tables.bench_build_table1),
@@ -30,6 +30,7 @@ def main() -> None:
         ("client_coalescing", client_bench.bench_client),
         ("wal_group_commit", wal_bench.bench_wal),
         ("staged_build", build_bench.bench_build),
+        ("plane_swarm", plane_bench.bench_plane),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

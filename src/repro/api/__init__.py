@@ -7,17 +7,47 @@ frontend, docs/client_api.md): ``Database`` routes typed ``Query``
 requests by table name, coalesces concurrent callers through a
 ``QueryScheduler``, and streams huge enumerations in pages via
 ``ReadSession``.  See docs/table_api.md and docs/client_api.md.
-"""
-from repro.api.catalog import Catalog
-from repro.api.client import Database, Page, Query, QueryFuture, \
-    QueryResult, QueryScheduler, ReadSession
-from repro.api.fm import FMIndex
-from repro.api.memtable import Memtable
-from repro.api.runs import Run
-from repro.api.table import SuffixTable, default_root, open_table
-from repro.api.wal import RecoverySummary, WriteAheadLog
 
-__all__ = ["Catalog", "Database", "FMIndex", "Memtable", "Page", "Query",
-           "QueryFuture", "QueryResult", "QueryScheduler", "ReadSession",
-           "RecoverySummary", "Run", "SuffixTable", "WriteAheadLog",
-           "default_root", "open_table"]
+Exports resolve lazily (PEP 562): importing a light submodule such as
+``repro.api.wal`` does NOT drag in the jax-backed table machinery.  The
+serving plane's tablet workers (``repro.serving.tablet_server``) depend
+on this — they replay WAL segments and snapshot slices with numpy only,
+so a worker process starts in milliseconds instead of paying a full jax
+import per tablet replica.
+"""
+import importlib
+
+_EXPORTS = {
+    "Catalog": "repro.api.catalog",
+    "Database": "repro.api.client",
+    "Page": "repro.api.client",
+    "Query": "repro.api.client",
+    "QueryFuture": "repro.api.client",
+    "QueryResult": "repro.api.client",
+    "QueryScheduler": "repro.api.client",
+    "ReadSession": "repro.api.client",
+    "FMIndex": "repro.api.fm",
+    "Memtable": "repro.api.memtable",
+    "Run": "repro.api.runs",
+    "SuffixTable": "repro.api.table",
+    "default_root": "repro.api.table",
+    "open_table": "repro.api.table",
+    "RecoverySummary": "repro.api.wal",
+    "WriteAheadLog": "repro.api.wal",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value        # cache: resolve each name once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

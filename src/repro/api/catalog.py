@@ -50,11 +50,12 @@ def _has_snapshot(table_dir: str) -> bool:
 
 def _is_table_remnant(table_dir: str) -> bool:
     """True iff every entry of ``table_dir`` is table machinery — step
-    dirs (published or ``.tmp`` partial streams), ``wal/``, ``fm/``.  The
+    dirs (published or ``.tmp`` partial streams), ``wal/``, ``fm/``, the
+    serving plane's ``tablets/`` map and ``metrics.jsonl`` feed.  The
     guard that keeps reconcile from deleting an unrelated directory (a
     user's spill dir, say) that merely lives under the catalog root."""
     for entry in os.listdir(table_dir):
-        if entry in ("wal", "fm"):
+        if entry in ("wal", "fm", "tablets", "metrics.jsonl"):
             continue
         if _STEP_RE.fullmatch(entry.removesuffix(".tmp")):
             continue
@@ -73,6 +74,15 @@ def table_fm_dir(root: str, name: str) -> str:
     single place the fm/ path layout is decided — ``drop_table`` and the
     crashed-create reconcile remove it with the table dir)."""
     return os.path.join(root, name, "fm")
+
+
+def table_tablets_dir(root: str, name: str) -> str:
+    """Directory holding ``name``'s serving-plane METADATA — the tablet
+    ``manifest.json`` written by ``repro.serving.plane.split_table`` and
+    the live ``serving.json`` endpoints (docs/serving_plane.md).  Like
+    wal/ and fm/, it rides inside the table directory so drop/reconcile
+    remove the tablet map together with the table."""
+    return os.path.join(root, name, "tablets")
 
 
 class Catalog:
@@ -182,6 +192,11 @@ class Catalog:
         """Where ``name``'s frozen FM-index artifact lives
         (``repro.api.fm``)."""
         return table_fm_dir(self.root, name)
+
+    def tablets_dir(self, name: str) -> str:
+        """Where ``name``'s serving-plane tablet map lives
+        (``repro.serving.plane``)."""
+        return table_tablets_dir(self.root, name)
 
     # -- table lifecycle -----------------------------------------------------
     def create_table(self, name: str, codes, **kw) -> SuffixTable:

@@ -31,6 +31,7 @@ the queries/sec win.  See docs/client_api.md.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import threading
@@ -64,6 +65,9 @@ class Query:
     cap still applies at execution); ``deadline_ms`` bounds how long the
     query may wait in the scheduler queue before execution starts —
     an expired query gets an error result, never a silent stale answer.
+    ``tenant`` names the quota account the query is charged to when the
+    routed table meters admission (``RemoteTable.admit`` — see
+    docs/serving_plane.md); unmetered tables ignore it.
     """
     table: str
     kind: str = "scan"
@@ -73,6 +77,7 @@ class Query:
     top_k: int = 0
     max_len: Optional[int] = None
     deadline_ms: Optional[float] = None
+    tenant: Optional[str] = None
 
     def __post_init__(self):
         if self.kind not in QUERY_KINDS:
@@ -169,6 +174,14 @@ class QueryResult:
         return self.error is None
 
     @property
+    def overloaded(self) -> bool:
+        """True when the query was SHED by admission control — a tenant
+        quota or a saturated worker fleet — rather than failed.  Shed is
+        a typed, retryable outcome: the caller should back off, not
+        treat the answer as wrong (docs/serving_plane.md)."""
+        return self.error is not None and "OVERLOADED" in self.error
+
+    @property
     def value(self):
         """The kind-appropriate payload; raises on an error result."""
         if self.error is not None:
@@ -226,6 +239,7 @@ class SchedulerStats:
     deadline_expired: int = 0
     errors: int = 0
     fast_path_queries: int = 0    # ran inline, bypassing the window
+    shed: int = 0                 # rejected by admission (quota/overload)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -413,7 +427,13 @@ class QueryScheduler:
                     self._busy -= 1
                     self._cv.notify_all()
 
-    def _lock_for(self, table) -> threading.Lock:
+    def _lock_for(self, table):
+        # tables that fan work out to OTHER processes (RemoteTable) are
+        # safe — and meant — to scan concurrently: serializing their
+        # dispatches behind one lock would collapse the plane back to
+        # single-worker throughput, so they get a no-op guard
+        if getattr(table, "supports_concurrent_scans", False):
+            return contextlib.nullcontext()
         with self._cv:
             lock = self._table_locks.get(id(table))
             if lock is None:
@@ -515,6 +535,24 @@ class QueryScheduler:
                         wait_ms=(now - p.t_submit) * 1e3))
                 else:
                     live.append(p)
+            # admission: a metered table (the serving-plane router) may
+            # shed per tenant BEFORE any work is dispatched — shed is a
+            # typed result (`QueryResult.overloaded`), never an answer
+            admit = getattr(table, "admit", None)
+            if admit is not None and live:
+                admitted = []
+                for p in live:
+                    if admit(p.query.tenant, p.query.num_patterns):
+                        admitted.append(p)
+                    else:
+                        with self._cv:
+                            self.stats.shed += 1
+                        p.future._set(_error_result(
+                            p.query,
+                            f"OVERLOADED: tenant "
+                            f"{p.query.tenant!r} is over quota",
+                            wait_ms=(now - p.t_submit) * 1e3))
+                live = admitted
             if not live:
                 return
             try:
@@ -698,6 +736,8 @@ class Database:
         self._open_kw = dict(open_kw)
         self._tables: dict[str, SuffixTable] = {}
         self._owned: set[str] = set()       # opened/created by this handle
+        self._remote: set[str] = set()      # plane handles we must close
+        self._closed = False
         self._open_lock = threading.Lock()
         self.scheduler = QueryScheduler(
             self.table, window_ms=coalesce_window_ms, max_batch=max_batch,
@@ -715,6 +755,8 @@ class Database:
     # -- table routing -------------------------------------------------------
     def table(self, name: str) -> SuffixTable:
         """The named table — attached, cached, or lazily opened."""
+        if self._closed:
+            raise RuntimeError("database is closed")
         t = self._tables.get(name)
         if t is None:
             if self.catalog is None:
@@ -735,6 +777,33 @@ class Database:
             raise ValueError(f"table {name!r} is already attached")
         self._tables[name] = table
         return table
+
+    def connect_plane(self, name: str, *, attach_as: Optional[str] = None,
+                      **router_kw):
+        """Route ``name`` through its deployed serving plane
+        (``root/<name>/tablets/`` — see docs/serving_plane.md).
+
+        Reads the tablet manifest + live endpoints, builds a
+        :class:`~repro.serving.router.RemoteTable`, and attaches it —
+        by default UNDER THE TABLE'S OWN NAME, so every existing typed
+        query against ``name`` transparently becomes a routed
+        multi-process read (the attached handle shadows the lazy
+        on-disk open).  ``attach_as`` registers it under an alias
+        instead, keeping the local single-process open reachable for
+        side-by-side comparison.  ``router_kw`` reaches the
+        ``TabletRouter`` (hedging, quotas, metrics).  The handle is
+        owned: :meth:`close` shuts its router down."""
+        if self.root is None:
+            raise RuntimeError("in-memory database has no catalog root "
+                               "to read a tablet manifest from")
+        from repro.serving.router import connect
+        alias = attach_as or name
+        if alias in self._tables:
+            raise ValueError(f"table {alias!r} is already attached")
+        remote = connect(self.root, name, **router_kw)
+        self._tables[alias] = remote
+        self._remote.add(alias)
+        return remote
 
     def ensure_attached(self, table: SuffixTable,
                         name: Optional[str] = None) -> str:
@@ -861,14 +930,22 @@ class Database:
                            for name, t in sorted(self._tables.items())}}
 
     def close(self) -> None:
-        """Drain the scheduler, then release the commit-log handles of
-        every table THIS handle opened or created (attached tables stay
-        open — the attacher owns their lifecycle)."""
+        """Shut the handle down, idempotently: stop accepting queries,
+        drain and JOIN the scheduler's worker thread, then release the
+        commit-log fds of every table THIS handle opened or created and
+        the routers of every plane it connected (attached in-memory
+        tables stay open — the attacher owns their lifecycle).  After
+        ``close()``, :meth:`table` and new queries raise."""
+        if self._closed:
+            return
+        self._closed = True
         self.scheduler.close()
         for name in sorted(self._owned):
             t = self._tables.get(name)
             if t is not None:
                 t.close()
+        for alias in sorted(self._remote):
+            self._tables[alias].close()
 
     def __enter__(self) -> "Database":
         return self

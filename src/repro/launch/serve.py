@@ -17,6 +17,11 @@ beyond-paper client surface:
   streamed in bounded ``ReadSession`` pages with a resumable cursor;
 * **the write path** — append, merged-read, minor compaction (seal to a
   run), major compaction (merge-fold, version bump);
+* **the serving plane** (``--tablets N``) — the table is range-split
+  into N tablets, served by separate worker processes (×
+  ``--plane-replicas``), and the same typed queries are answered
+  bit-identically through the multi-process router
+  (docs/serving_plane.md);
 * the table's documented ``stats()`` schema, printed at the end.
 
     PYTHONPATH=src python -m repro.launch.serve --text-len 200000 \
@@ -24,17 +29,60 @@ beyond-paper client surface:
 
 Pass ``--root DIR`` to persist: the first run creates ``--table`` under
 DIR, later runs re-open it (no rebuild) on any device count.
+
+Launch tuning happens BEFORE the jax import (jax reads the environment
+exactly once): ``--host-devices N`` forces N host platform devices via
+``XLA_FLAGS`` and quiets the XLA banner via ``TF_CPP_MIN_LOG_LEVEL`` —
+so heavy imports live inside :func:`main`, not at module top.
+
+``--dump-stats`` is the ``/varz`` path: it aggregates the served
+table's ``metrics.jsonl`` feed (written by tablet workers and routers)
+and exits without ever importing jax.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
-import jax
 
-from repro.api import Database, Query, SuffixTable
-from repro.core.codec import decode_dna, random_dna
-from repro.serving import HedgedScanService
+def _dump_stats(args) -> None:
+    """The /varz snapshot: aggregate root/<table>/metrics.jsonl and
+    print fleet totals + the latest line per emitter (jax-free)."""
+    from repro.serving.metrics import aggregate_metrics
+    if args.root is None:
+        print("[varz  ] --dump-stats needs --root (metrics.jsonl lives "
+              "in the table's catalog dir)")
+        return
+    path = os.path.join(args.root, args.table, "metrics.jsonl")
+    agg = aggregate_metrics(path)
+    s = agg["summary"]
+    print(f"[varz  ] table={args.table} emitters={s['emitters']} "
+          f"workers={s['workers']} tablets={s['tablets']}")
+    print(f"[varz  ] queries={s['queries']} rpcs={s['rpcs']} "
+          f"shed_worker={s['shed_worker']} shed_quota={s['shed_quota']} "
+          f"hedge_fired={s['hedge_fired']} hedge_wins={s['hedge_wins']} "
+          f"failovers={s['failovers']} "
+          f"wal_replayed={s['wal_records_replayed']}")
+    print(f"[varz  ] queue_depth={s['queue_depth']} "
+          f"p50_ms_median={s['p50_ms_median']} "
+          f"p95_ms_max={s['p95_ms_max']}")
+    for rec in agg["latest"]:
+        role = rec.get("role", "worker")
+        if role == "worker":
+            print(f"[varz  ] worker t{rec.get('tablet')}r"
+                  f"{rec.get('replica')} pid={rec.get('pid')} "
+                  f"queries={rec.get('queries')} shed={rec.get('shed')} "
+                  f"p50={rec.get('p50_ms')} p95={rec.get('p95_ms')} "
+                  f"crc={rec.get('text_crc')}")
+        else:
+            print(f"[varz  ] router pid={rec.get('pid')} "
+                  f"rpcs={rec.get('rpcs')} "
+                  f"hedge={rec.get('hedge_fired')}/"
+                  f"{rec.get('hedge_wins')} "
+                  f"failovers={rec.get('failovers')} "
+                  f"quota_shed={rec.get('quota_shed')}")
 
 
 def main(argv=None):
@@ -91,8 +139,50 @@ def main(argv=None):
                     help="table name under --root")
     ap.add_argument("--aux-table", default="dna_aux",
                     help="second table for the multi-table demo")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force this many XLA host-platform devices "
+                         "(sets XLA_FLAGS before the jax import; a "
+                         "CPU-only box then runs the multi-device scan "
+                         "paths for real)")
+    ap.add_argument("--dump-stats", action="store_true",
+                    help="print the /varz aggregation of the table's "
+                         "metrics.jsonl serving feed and exit (no jax "
+                         "import, no table open)")
+    ap.add_argument("--tablets", type=int, default=0,
+                    help="after the write demo, range-split the table "
+                         "into this many tablets and serve them from "
+                         "separate worker processes (needs --root)")
+    ap.add_argument("--plane-replicas", type=int, default=1,
+                    help="worker processes per tablet in the plane demo "
+                         "(2+ enables real hedged reads + failover)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.dump_stats:
+        return _dump_stats(args)
+
+    # tuned launch path: jax reads the environment ONCE at import, so
+    # these must land before any jax import in this process
+    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+    if args.host_devices is not None:
+        if "jax" in sys.modules:
+            print(f"[tune  ] warning: jax already imported — "
+                  f"--host-devices {args.host_devices} cannot take "
+                  f"effect in this process (set XLA_FLAGS before "
+                  f"launch instead)")
+        else:
+            flag = (f"--xla_force_host_platform_device_count="
+                    f"{args.host_devices}")
+            prev = os.environ.get("XLA_FLAGS", "")
+            os.environ["XLA_FLAGS"] = f"{prev} {flag}".strip()
+            print(f"[tune  ] XLA_FLAGS += {flag}")
+
+    import jax
+    import numpy as np
+
+    from repro.api import Database, Query, SuffixTable
+    from repro.core.codec import decode_dna, random_dna
+    from repro.serving import HedgedScanService
 
     n_dev = len(jax.devices())
     lsm = {"memtable_limit": args.memtable_limit, "max_runs": args.max_runs,
@@ -229,6 +319,41 @@ def main(argv=None):
     print(f"[write ] append 1000 bases: count({planted[:10]}...) "
           f"{before} -> {after} (merged read); sealed into run "
           f"#{n_runs} (count still {sealed}); major-compacted to v{v}")
+
+    # the serving plane: range-split into tablets, serve from separate
+    # worker processes, answer the same typed queries bit-identically
+    # through the router (docs/serving_plane.md)
+    if args.tablets > 0:
+        if args.root is None:
+            print("[clamp ] --tablets needs --root (tablet workers serve "
+                  "a persisted snapshot); skipping the plane demo")
+        else:
+            from repro.serving.plane import ServingPlane
+            t2 = time.time()
+            with ServingPlane.deploy(args.root, args.table, args.tablets,
+                                     replicas=args.plane_replicas,
+                                     metrics_interval_s=1.0) as plane:
+                alias = args.table + "@plane"
+                remote = db.connect_plane(args.table, attach_as=alias)
+                probe = hot + [planted, "A", "ACG"]
+                local_r = db.query(Query.scan(args.table, probe, top_k=4))
+                plane_r = db.query(Query.scan(alias, probe, top_k=4))
+                same = (np.array_equal(local_r.count, plane_r.count)
+                        and np.array_equal(local_r.first_pos,
+                                           plane_r.first_pos)
+                        and np.array_equal(local_r.positions,
+                                           plane_r.positions))
+                print(f"[plane ] {args.tablets} tablet(s) x "
+                      f"{args.plane_replicas} replica(s) up in "
+                      f"{time.time() - t2:.1f}s: routed scan identical="
+                      f"{same} over {len(probe)} probes")
+                rs = remote.router.stats()
+                print(f"[plane ] router rpcs={rs['rpcs']} "
+                      f"hedge_fired={rs['hedge_fired']} "
+                      f"hedge_wins={rs['hedge_wins']} "
+                      f"failovers={rs['failovers']} "
+                      f"p50={rs['p50_ms']}ms p95={rs['p95_ms']}ms")
+                del plane
 
     # the documented stats schema (docs/client_api.md)
     st = table.stats()

@@ -1,7 +1,42 @@
-from repro.core.planner import ScanPlanner
-from repro.serving.engine import (HedgedScanService, ServeConfig,
-                                  greedy_generate, make_decode_fn,
-                                  make_prefill_fn)
+"""repro.serving — scan serving: in-process engine + the multi-process
+serving plane (docs/serving_plane.md).
 
-__all__ = ["HedgedScanService", "ScanPlanner", "ServeConfig",
-           "greedy_generate", "make_decode_fn", "make_prefill_fn"]
+Exports resolve lazily (PEP 562) so that the plane's numpy-only modules
+(``rpc``, ``metrics``, ``tablet_server``) can be imported by worker
+processes without paying the jax import the engine needs.
+"""
+import importlib
+
+_EXPORTS = {
+    "HedgedScanService": "repro.serving.engine",
+    "ServeConfig": "repro.serving.engine",
+    "greedy_generate": "repro.serving.engine",
+    "make_decode_fn": "repro.serving.engine",
+    "make_prefill_fn": "repro.serving.engine",
+    "ScanPlanner": "repro.core.planner",
+    "ServingPlane": "repro.serving.plane",
+    "split_table": "repro.serving.plane",
+    "TabletRouter": "repro.serving.router",
+    "RemoteTable": "repro.serving.router",
+    "OverloadedError": "repro.serving.router",
+    "RpcClient": "repro.serving.rpc",
+    "RpcServer": "repro.serving.rpc",
+    "RpcError": "repro.serving.rpc",
+    "aggregate_metrics": "repro.serving.metrics",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

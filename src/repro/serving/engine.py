@@ -103,7 +103,12 @@ class HedgedScanService:
     771 ms events).  A backup request fires after ``hedge_deadline_ms``;
     effective latency is min(primary, deadline + backup).  Scan RESULTS
     come from the real engine; only latency is simulated (no real
-    multi-machine here).
+    multi-machine here) — UNLESS the served table is a
+    :class:`~repro.serving.router.RemoteTable`: then the hedge is a real
+    second RPC to a different worker process (the router's replica
+    machinery — ``hedged=`` toggles it per call) and the reported
+    latency is the real measured wall time of the routed batch, so the
+    same Table III/IV statistics compare simulated and genuine hedging.
     """
     table: "object"                  # SuffixTable | TabletStore (shim)
     replicas: int = 2
@@ -119,10 +124,11 @@ class HedgedScanService:
     def __post_init__(self):
         from repro.api import Database
         from repro.api.table import SuffixTable
+        self.is_remote = bool(getattr(self.table, "is_remote", False))
         if isinstance(self.table, TabletStore):
             self.table = SuffixTable.from_store(self.table,
                                                 planner=self.planner)
-        if self.planner is None:
+        if self.planner is None and not self.is_remote:
             self.planner = self.table.planner
         if self.database is None:
             self.database = Database.in_memory()
@@ -148,14 +154,32 @@ class HedgedScanService:
         """Returns (QueryResult, latency_ms per query).  The batch rides
         a typed raw-codes Query through the client (bucket-padded jitted
         planner invocation, sentinel retry, merged LSM tiers)."""
+        import time as _time
+
         from repro.api import Query
         q = Query(table=self.table_name, kind="scan",
                   codes=np.asarray(patterns_packed), lens=np.asarray(plen))
+        n = int(np.asarray(plen).shape[0])
+        if self.is_remote:
+            # real plane: toggle the router's genuine hedging per call
+            # and report measured wall latency (every query of the batch
+            # experienced the same routed dispatch)
+            router = self.table.router
+            prev = router.hedge_enabled
+            router.hedge_enabled = bool(hedged)
+            try:
+                t0 = _time.perf_counter()
+                res = self.database.query(q)
+                wall_ms = (_time.perf_counter() - t0) * 1e3
+            finally:
+                router.hedge_enabled = prev
+            if not res.ok:
+                raise RuntimeError(f"scan failed: {res.error}")
+            return res, np.full(n, wall_ms)
         res = self.database.query(q)
         if not res.ok:
             raise RuntimeError(f"scan failed: {res.error}")
         rng = self._rng
-        n = int(plen.shape[0])
         primary = self._latency(rng, n)
         if not hedged or self.replicas < 2:
             return res, primary
@@ -174,7 +198,8 @@ class HedgedScanService:
         up front — the planner rejects over-cap patterns per batch, so an
         invalid workload would otherwise crash midway with partial work
         done and an opaque traceback."""
-        cap = int(self.planner.max_pattern_len)
+        cap = int(self.planner.max_pattern_len if self.planner is not None
+                  else self.table.max_query_len)
         if max_len > cap:
             raise ValueError(
                 f"run_workload max_len={max_len} exceeds the table's "

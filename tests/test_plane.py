@@ -1,0 +1,479 @@
+"""The serving plane end-to-end: tablets, replicas, hedging, failover.
+
+The expensive fixture deploys ONE real multi-process plane per module —
+a 4-tablet x 2-replica fleet over a table with every LSM tier populated
+(base + sealed run + memtable snapshot + WAL tail) — and every
+bit-identicality assertion compares the routed answer against the live
+single-process table on the same ``Database`` handle.  Process-level
+faults (kill -9 mid-serving, restart + WAL-tail replay) run against
+that fleet; hedging/failover/admission *policies* are additionally
+pinned by in-process RPC unit tests, which are deterministic where the
+real fleet is timing-dependent.
+"""
+import json
+import os
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Database, Query
+from repro.serving import rpc
+from repro.serving.metrics import aggregate_metrics
+from repro.serving.plane import ServingPlane, split_table
+from repro.serving.router import (OverloadedError, RemoteTable,
+                                  TabletRouter, TokenBucket)
+from repro.serving.tablet_server import encode_pattern_rows
+
+N_TABLETS = 4
+REPLICAS = 2
+ALIAS = "dna@plane"
+
+
+def _rand_pats(rng, n, lmin=1, lmax=24):
+    return ["".join("ACGT"[c] for c in rng.integers(0, 4, size=int(L)))
+            for L in rng.integers(lmin, lmax + 1, size=n)]
+
+
+class PlaneEnv:
+    def __init__(self, root, db, table, plane, remote):
+        self.root = root
+        self.db = db
+        self.table = table        # the live single-process oracle
+        self.plane = plane
+        self.remote = remote
+
+
+@pytest.fixture(scope="module")
+def env(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("plane") / "root")
+    rng = np.random.default_rng(7)
+    db = Database(root)
+    table = db.create_table(
+        "dna", rng.integers(0, 4, size=16000, dtype=np.uint8),
+        is_dna=True, max_query_len=64)
+    # populate every tier: sealed run + memtable (snapshotted by flush)
+    # + a WAL tail past the snapshot (replayed read-only by the owner)
+    planted = "TTTTTTTTGGGGGGGG"                 # straddles tier borders
+    for i in range(2):
+        db.append("dna", rng.integers(0, 4, size=500, dtype=np.uint8))
+    table.minor_compact()
+    db.append("dna", np.concatenate(
+        [np.array([3] * 8 + [2] * 8, np.uint8),
+         rng.integers(0, 4, size=300, dtype=np.uint8)]))
+    table.flush()                                # publish the snapshot
+    db.append("dna", np.concatenate(
+        [rng.integers(0, 4, size=100, dtype=np.uint8),
+         np.array([3] * 8 + [2] * 8, np.uint8)]))    # WAL tail only
+    assert int(table.count([planted])[0]) >= 2
+
+    plane = ServingPlane.deploy(root, "dna", N_TABLETS, replicas=REPLICAS,
+                                metrics_interval_s=0.5)
+    remote = db.connect_plane("dna", attach_as=ALIAS)
+    yield PlaneEnv(root, db, table, plane, remote)
+    plane.stop()
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# bit-identicality across the typed Query surface
+# ---------------------------------------------------------------------------
+def test_scan_bit_identical(env):
+    rng = np.random.default_rng(11)
+    pats = _rand_pats(rng, 150) + ["TTTTTTTTGGGGGGGG", "ACGT", "A"]
+    local = env.table.scan(pats, top_k=8)
+    routed = env.remote.scan(pats, top_k=8)
+    assert np.array_equal(local.count, routed.count)
+    assert np.array_equal(local.first_pos, routed.first_pos)
+    assert np.array_equal(local.positions, routed.positions)
+    assert np.array_equal(local.found, routed.found)
+    assert int(local.count.sum()) > 0
+
+
+@pytest.mark.parametrize("kind", ["count", "contains", "locate", "scan"])
+def test_typed_queries_identical(env, kind):
+    rng = np.random.default_rng(13)
+    pats = _rand_pats(rng, 40) + ["TTTTTTTTGGGGGGGG"]
+    ctor = getattr(Query, kind)
+    a = env.db.query(ctor("dna", pats))
+    b = env.db.query(ctor(ALIAS, pats))
+    assert a.ok and b.ok
+    assert np.array_equal(a.found, b.found)
+    assert np.array_equal(a.count, b.count)
+    assert np.array_equal(a.first_pos, b.first_pos)
+    if a.positions is not None or b.positions is not None:
+        assert np.array_equal(a.positions, b.positions)
+
+
+def test_raw_codes_query_identical(env):
+    """Packed-uint32 DNA batches (the planner's raw encoding) route too."""
+    from repro.core import query as Q
+    pats = _rand_pats(np.random.default_rng(17), 32)
+    _, packed, plen = Q.encode_patterns(pats, 64)
+    qa = Query(table="dna", codes=np.asarray(packed),
+               lens=np.asarray(plen))
+    qb = Query(table=ALIAS, codes=np.asarray(packed),
+               lens=np.asarray(plen))
+    a, b = env.db.query(qa), env.db.query(qb)
+    assert a.ok and b.ok
+    assert np.array_equal(a.count, b.count)
+    assert np.array_equal(a.first_pos, b.first_pos)
+
+
+def test_read_session_pages_across_tablets(env):
+    """Paged streaming crosses tablet boundaries with a resumable
+    cursor: pages through the plane equal pages off the local table."""
+    pat = "ACG"
+    local = [p.positions for p in env.db.read_rows("dna", pat,
+                                                   page_size=16).pages()]
+    sess = env.db.read_rows(ALIAS, pat, page_size=16)
+    routed = []
+    cursor = None
+    for i, page in enumerate(sess.pages()):
+        routed.append(page.positions)
+        if i == 2:
+            cursor = page.cursor          # resume mid-stream below
+    assert len(local) == len(routed)
+    for a, b in zip(local, routed):
+        assert np.array_equal(a, b)
+    resumed = env.db.resume_read(cursor)
+    tail = np.concatenate(
+        [p.positions for p in resumed.pages()] or [np.zeros(0, np.int64)])
+    want = np.concatenate(routed[3:] or [np.zeros(0, np.int64)])
+    assert np.array_equal(tail, want)
+
+
+def test_locate_range_merge(env):
+    pat = "ACGT"
+    full_local = env.table.locate_range(pat, after=-1, limit=None)
+    full_routed = env.remote.locate_range(pat, after=-1, limit=None)
+    assert np.array_equal(full_local, full_routed)
+    mid = int(full_local[len(full_local) // 2])
+    assert np.array_equal(
+        env.table.locate_range(pat, after=mid, limit=9),
+        env.remote.locate_range(pat, after=mid, limit=9))
+
+
+def test_encoder_parity_with_planner(env):
+    """The worker's numpy-only pattern encoder matches the planner's
+    jax-side encoding symbol for symbol."""
+    from repro.core import query as Q
+    pats = _rand_pats(np.random.default_rng(23), 20)
+    rows, lens = encode_pattern_rows(pats)
+    codes, _packed, plens = Q.encode_patterns(pats, 64)
+    codes = np.asarray(codes)
+    for i, p in enumerate(pats):
+        assert int(lens[i]) == int(plens[i])
+        assert np.array_equal(rows[i, :len(p)], codes[i, :len(p)])
+
+
+# ---------------------------------------------------------------------------
+# crash / failover / restart
+# ---------------------------------------------------------------------------
+def test_kill9_failover_and_bitwise_restart(env):
+    rng = np.random.default_rng(29)
+    pats = _rand_pats(rng, 60) + ["TTTTTTTTGGGGGGGG"]
+    want = env.table.scan(pats, top_k=8)
+
+    victim = 1
+    sock = env.plane._sock_path(victim, 0)
+    client = rpc.RpcClient(sock)
+    crc_before = client.call({"op": "stats"})["stats"]["text_crc"]
+    client.close()
+
+    env.plane.kill(victim, 0, sig=signal.SIGKILL)
+    assert not env.plane.alive(victim, 0)
+    before = env.remote.router.failovers
+    got = env.remote.scan(pats, top_k=8)       # replica serves, no gap
+    assert np.array_equal(want.count, got.count)
+    assert np.array_equal(want.positions, got.positions)
+    assert env.remote.router.failovers >= before
+
+    env.plane.restart(victim, 0)
+    client = rpc.RpcClient(sock)
+    stats = client.call({"op": "stats"})["stats"]
+    client.close()
+    # the restarted worker rebuilt the same logical text: snapshot
+    # slice + WAL tail replayed bit-identically (crc covers both)
+    assert stats["text_crc"] == crc_before
+    got2 = env.remote.scan(pats, top_k=8)
+    assert np.array_equal(want.count, got2.count)
+
+
+def test_owner_replays_wal_tail(env):
+    sock = env.plane._sock_path(N_TABLETS - 1, 0)
+    client = rpc.RpcClient(sock)
+    stats = client.call({"op": "stats"})["stats"]
+    client.close()
+    assert stats["serves_delta"] is True
+    assert stats["wal_records_replayed"] >= 1
+    assert stats["delta_len"] > 0
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+def test_tenant_quota_sheds_typed_overloaded(env):
+    env.remote.router.set_quota("abuser", rate_per_s=1.0, burst=8.0)
+    pats = ["ACGT"] * 4
+    shed = ok = 0
+    for _ in range(8):
+        r = env.db.query(Query.count(ALIAS, pats, tenant="abuser"))
+        if r.overloaded:
+            shed += 1
+        else:
+            ok += 1
+            assert int(r.count[0]) == int(env.table.count(["ACGT"])[0])
+    assert shed >= 1 and ok >= 1          # burst admits, then the shed
+    # an unmetered tenant is untouched by the abuser's quota
+    r = env.db.query(Query.count(ALIAS, pats, tenant="good"))
+    assert r.ok and not r.overloaded
+    assert env.db.scheduler.stats.shed >= 1
+
+
+def test_metrics_feed_and_varz(env):
+    path = os.path.join(env.root, "dna", "metrics.jsonl")
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        agg = aggregate_metrics(path)
+        if agg["summary"]["workers"] >= N_TABLETS * REPLICAS:
+            break
+        time.sleep(0.25)
+    s = agg["summary"]
+    assert s["tablets"] == N_TABLETS
+    assert s["queries"] > 0
+    assert s["wal_records_replayed"] >= 1
+    assert all("p95_ms" in r for r in agg["latest"]
+               if r.get("role") == "worker")
+    # every line is valid JSON with a timestamp (torn lines are skipped)
+    with open(path) as f:
+        recs = [json.loads(ln) for ln in f if ln.strip()]
+    assert all("ts" in r for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# in-process policy units: framing, buckets, hedge, failover, shed
+# ---------------------------------------------------------------------------
+def test_rpc_frame_roundtrip():
+    msg = {"op": "scan", "top_k": 3, "note": "héllo",
+           "rows": np.arange(12, dtype=np.int32).reshape(3, 4),
+           "lens": np.array([4, 2, 1], np.int64)}
+    out = rpc.decode_message(rpc.encode_message(msg)[4:])
+    assert out["op"] == "scan" and out["top_k"] == 3
+    assert out["note"] == "héllo"
+    assert np.array_equal(out["rows"], msg["rows"])
+    assert out["rows"].dtype == np.int32
+    assert np.array_equal(out["lens"], msg["lens"])
+
+
+def test_token_bucket():
+    b = TokenBucket(rate_per_s=1000.0, burst=3.0)
+    assert b.try_acquire(3)
+    assert not b.try_acquire(1)         # drained
+    time.sleep(0.01)
+    assert b.try_acquire(1)             # refilled at 1000/s
+
+
+def _one_tablet_manifest():
+    return {"table": "t", "step": 0, "table_version": 1, "is_dna": True,
+            "max_query_len": 8, "n_base": 0, "key_len": 4,
+            "n_tablets": 1,
+            "tablets": [{"id": 0, "rank_lo": 0, "rank_hi": 0, "key": []}]}
+
+
+def _serve(path, handler, **kw):
+    return rpc.RpcServer(path, handler, **kw)
+
+
+def test_hedge_fires_and_backup_wins(tmp_path):
+    import tempfile
+    d = tempfile.mkdtemp(prefix="saplane-test-")
+    slow = _serve(os.path.join(d, "a.sock"),
+                  lambda m: (time.sleep(0.4), {"status": "ok", "who": 0})[1])
+    fast = _serve(os.path.join(d, "b.sock"),
+                  lambda m: {"status": "ok", "who": 1})
+    try:
+        r = TabletRouter(_one_tablet_manifest(),
+                         [[slow.path, fast.path]], hedge_deadline_ms=40)
+        reply = r._call_tablet(0, {"op": "x"})
+        assert reply["who"] == 1            # backup won the race
+        assert r.hedge_fired == 1 and r.hedge_wins == 1
+        r.close()
+    finally:
+        slow.stop()
+        fast.stop()
+
+
+def test_failover_on_dead_primary(tmp_path):
+    import tempfile
+    d = tempfile.mkdtemp(prefix="saplane-test-")
+    alive = _serve(os.path.join(d, "b.sock"),
+                   lambda m: {"status": "ok", "who": 1})
+    try:
+        r = TabletRouter(_one_tablet_manifest(),
+                         [[os.path.join(d, "dead.sock"), alive.path]],
+                         hedge_enabled=False)
+        reply = r._call_tablet(0, {"op": "x"})
+        assert reply["who"] == 1
+        assert r.failovers == 1
+        r.close()
+    finally:
+        alive.stop()
+
+
+def test_all_replicas_shedding_raises_overloaded(tmp_path):
+    import tempfile
+    d = tempfile.mkdtemp(prefix="saplane-test-")
+    gate = threading.Event()
+
+    def stuck(m):
+        gate.wait(5.0)
+        return {"status": "ok"}
+
+    srv = _serve(os.path.join(d, "a.sock"), stuck, max_inflight=1)
+    try:
+        r = TabletRouter(_one_tablet_manifest(), [[srv.path]],
+                         hedge_enabled=False)
+        occupier = threading.Thread(
+            target=lambda: r._call_tablet(0, {"op": "x"}), daemon=True)
+        occupier.start()
+        deadline = time.time() + 2
+        while srv.queue_depth == 0 and time.time() < deadline:
+            time.sleep(0.005)
+        with pytest.raises(OverloadedError) as ei:
+            r._call_tablet(0, {"op": "x"})   # queue full -> typed shed
+        assert "OVERLOADED" in str(ei.value)
+        assert srv.shed_count >= 1
+        gate.set()
+        occupier.join(timeout=5)
+        r.close()
+    finally:
+        gate.set()
+        srv.stop()
+
+
+def test_scheduler_runs_remote_tables_concurrently():
+    """supports_concurrent_scans bypasses the per-table dispatch lock —
+    two callers must be able to overlap inside scan() (a barrier would
+    time out if the scheduler serialized them)."""
+
+    class FakeRemote:
+        supports_concurrent_scans = True
+        is_remote = True
+        barrier = threading.Barrier(2, timeout=5.0)
+
+        def scan(self, pats, top_k=0):
+            self.barrier.wait()
+            B = len(pats)
+            z = np.zeros(B, np.int64)
+            from repro.serving.router import _RemoteOutcome
+            return _RemoteOutcome(z > 0, z, np.full(B, -1, np.int64), None)
+
+    db = Database.in_memory()
+    db.attach("r", FakeRemote())
+    errs = []
+
+    def call():
+        try:
+            r = db.query(Query.count("r", ["ACGT"]))
+            if not r.ok:
+                errs.append(r.error)
+        except Exception as e:  # noqa: BLE001
+            errs.append(repr(e))
+
+    ts = [threading.Thread(target=call) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=10)
+    assert errs == []
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# split / catalog / lifecycle
+# ---------------------------------------------------------------------------
+def test_split_table_manifest_shape(env):
+    path = os.path.join(env.root, "dna", "tablets", "manifest.json")
+    with open(path) as f:
+        m = json.load(f)
+    assert m["n_tablets"] == N_TABLETS
+    assert m["tablets"][0]["rank_lo"] == 0
+    assert m["tablets"][-1]["rank_hi"] == m["n_base"]
+    for a, b in zip(m["tablets"], m["tablets"][1:]):
+        assert a["rank_hi"] == b["rank_lo"]        # contiguous cover
+    assert all(len(t["key"]) <= m["key_len"] for t in m["tablets"])
+
+
+def test_split_rejects_frozen(tmp_path):
+    root = str(tmp_path / "root")
+    db = Database(root)
+    db.create_table("f", np.random.default_rng(0).integers(
+        0, 4, size=2000, dtype=np.uint8), is_dna=True)
+    db.freeze("f")
+    with pytest.raises(RuntimeError, match="frozen"):
+        split_table(root, "f", 2)
+    db.close()
+
+
+def test_catalog_reconcile_keeps_plane_dirs(env):
+    from repro.api.catalog import Catalog
+    cat = Catalog(env.root)                      # reconciles on init
+    assert "dna" in cat
+    assert os.path.exists(os.path.join(env.root, "dna", "tablets",
+                                       "manifest.json"))
+    assert os.path.exists(os.path.join(env.root, "dna", "metrics.jsonl"))
+    # a crashed-create remnant that got as far as a tablets/ dir is
+    # still recognized as machinery and collected
+    ghost = os.path.join(env.root, "ghost")
+    os.makedirs(os.path.join(ghost, "tablets"))
+    open(os.path.join(ghost, "metrics.jsonl"), "w").close()
+    removed = Catalog(env.root).reconcile()
+    assert not os.path.exists(ghost) or "ghost" in removed
+
+
+def test_database_close_is_final_and_idempotent(tmp_path):
+    root = str(tmp_path / "root")
+    db = Database(root)
+    t = db.create_table("c", np.random.default_rng(1).integers(
+        0, 4, size=1500, dtype=np.uint8), is_dna=True)
+    db.append("c", np.array([0, 1, 2, 3], np.uint8))
+    assert db.query(Query.count("c", ["ACGT"])).ok
+    db.close()
+    db.close()                                   # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        db.table("c")
+    with pytest.raises(RuntimeError, match="closed"):
+        db.query(Query.count("c", ["ACGT"]))
+    # the scheduler worker thread is joined, not leaked
+    th = db.scheduler._thread
+    assert th is None or not th.is_alive()
+    # the owned table's WAL fd was released: a fresh open can attach
+    # the commit log immediately (an fd leak would replay-attach a
+    # still-open segment)
+    assert t._wal is None or t._wal._file is None
+    db2 = Database(root)
+    assert int(db2.query(Query.count("c", ["ACGT"])).count[0]) >= 1
+    db2.close()
+
+
+def test_remote_table_rejects_overlong_pattern(env):
+    with pytest.raises(ValueError, match="max_query_len"):
+        env.remote.scan(["A" * 65])
+
+
+def test_connect_helper_from_disk(env):
+    """A second client process would connect from the published
+    manifest + serving.json alone — same answers."""
+    from repro.serving.router import connect
+    rt = connect(env.root, "dna")
+    try:
+        pats = ["ACGT", "TTTTTTTTGGGGGGGG"]
+        local = env.table.scan(pats)
+        got = rt.scan(pats)
+        assert np.array_equal(local.count, got.count)
+    finally:
+        rt.close()
+    assert isinstance(rt, RemoteTable)

@@ -105,6 +105,69 @@ def test_serve_freeze_flags_and_bytes_line(tmp_path, capsys):
     assert "frozen=False" in plain and "[freeze]" not in plain
 
 
+def test_serve_host_devices_warns_when_jax_is_live(capsys):
+    """In-process jax is long imported, so the tuned launch path must
+    say the flag cannot take effect (instead of silently ignoring it)."""
+    serve.main(TINY + ["--host-devices", "4"])
+    out = capsys.readouterr().out
+    assert "[tune  ] warning: jax already imported" in out
+    assert "--host-devices 4 cannot take effect" in out
+
+
+def test_serve_host_devices_fresh_process():
+    """From a fresh interpreter the flag lands in XLA_FLAGS before the
+    jax import and the run really sees N host devices."""
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", *TINY,
+         "--queries", "48", "--host-devices", "2"],
+        env=env, capture_output=True, text=True, timeout=600).stdout
+    assert "[tune  ] XLA_FLAGS += " \
+           "--xla_force_host_platform_device_count=2" in out
+    assert "(2 device(s))" in out
+
+
+def test_serve_plane_demo_and_varz(tmp_path, capsys):
+    """--tablets splits, serves from worker processes, and answers the
+    probe scan bit-identically; --dump-stats then aggregates the
+    metrics feed the plane left behind, without touching jax."""
+    root = str(tmp_path / "root")
+    args = TINY + ["--root", root, "--tablets", "2",
+                   "--plane-replicas", "2"]
+    serve.main(args)
+    out = capsys.readouterr().out
+    assert "identical=True" in out
+    assert "2 tablet(s) x 2 replica(s)" in out
+    assert "[plane ] router rpcs=" in out
+
+    serve.main(["--root", root, "--table", "dna_serve", "--dump-stats"])
+    varz = capsys.readouterr().out
+    assert "[varz  ] table=dna_serve" in varz
+    assert "tablets=2" in varz
+    assert "[varz  ] worker t0r0" in varz
+    assert "[varz  ] queries=" in varz
+
+
+def test_serve_plane_needs_root(capsys):
+    serve.main(TINY + ["--tablets", "2"])
+    out = capsys.readouterr().out
+    assert "[clamp ] --tablets needs --root" in out
+    assert "[plane ]" not in out
+
+
+def test_serve_dump_stats_needs_root(capsys):
+    serve.main(["--dump-stats"])
+    out = capsys.readouterr().out
+    assert "--dump-stats needs --root" in out
+
+
 def test_serve_locate_rows_are_real_positions(capsys):
     serve.main(TINY)
     out = capsys.readouterr().out

@@ -29,6 +29,25 @@ at smoke sizes (docs/ci.md).
     python benchmarks/check_regression.py \\
         --pair BENCH_table.json=artifacts/BENCH_table.json \\
         --pair BENCH_wal.json=artifacts/BENCH_wal.json [--threshold 0.25]
+
+``--from-feed`` gates what a serving process ACTUALLY did, not an
+offline bench: it aggregates a ``metrics.jsonl`` feed left by a
+scripted load run (``benchmarks/serving_bench.py --feed-out``, or any
+live ``serve.py --metrics-interval`` / plane deployment) and compares
+the served p50/p95 against the committed ``BENCH_serving.json``
+baseline.  Feed latencies cross machines, so the bound is a sanity
+ratio (``--feed-ratio``, default 3.0: fail only when served latency is
+3x the baseline) — wide enough for runner-to-runner variance, tight
+enough to catch a serving-path pathology (docs/ci.md):
+
+    python benchmarks/check_regression.py \\
+        --from-feed bench-out/serving_feed.jsonl \\
+        --feed-baseline BENCH_serving.json [--feed-ratio 3.0]
+
+This mode parses the feed locally (stdlib only — CI invokes this
+script without ``PYTHONPATH=src``), mirroring
+``repro.serving.metrics.aggregate_metrics`` semantics: latest row per
+emitter; served p50 = median of per-emitter p50s, p95 = max.
 """
 from __future__ import annotations
 
@@ -117,6 +136,75 @@ def compare(baseline: dict, candidate: dict, threshold: float,
     return failures
 
 
+def aggregate_feed(path: str) -> dict:
+    """Stdlib-only ``metrics.jsonl`` aggregation (same semantics as
+    ``repro.serving.metrics.aggregate_metrics``, re-implemented here so
+    this script needs no PYTHONPATH): latest line per emitter; served
+    p50 = median of per-emitter p50s over the query-serving roles
+    (plane workers and in-process tables), p95 = worst emitter."""
+    latest: dict = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                continue                       # torn line: skip
+            key = (rec.get("role", "worker"), rec.get("tablet"),
+                   rec.get("replica"), rec.get("pid"), rec.get("table"))
+            cur = latest.get(key)
+            if cur is None or rec.get("ts", 0) >= cur.get("ts", 0):
+                latest[key] = rec
+    serving = [r for r in latest.values()
+               if r.get("role", "worker") in ("worker", "table")]
+    p50s = sorted(float(r.get("p50_ms") or 0.0) for r in serving)
+    return {
+        "emitters": len(latest),
+        "serving_emitters": len(serving),
+        "queries": sum(int(r.get("queries") or 0) for r in serving),
+        "p50_ms": (p50s[len(p50s) // 2] if p50s else 0.0),
+        "p95_ms": max((float(r.get("p95_ms") or 0.0) for r in serving),
+                      default=0.0),
+    }
+
+
+def check_feed(feed_path: str, baseline_path: str,
+               ratio: float) -> list[str]:
+    """Gate the feed's served p50/p95 against the ``served.*`` block of
+    the BENCH_serving baseline.  Returns failure messages."""
+    agg = aggregate_feed(feed_path)
+    print(f"[feed] {feed_path}: emitters={agg['emitters']} "
+          f"serving={agg['serving_emitters']} queries={agg['queries']} "
+          f"served p50={agg['p50_ms']}ms p95={agg['p95_ms']}ms")
+    failures = []
+    if agg["serving_emitters"] == 0 or agg["queries"] == 0:
+        failures.append(f"feed: {feed_path} has no serving emitters / "
+                        f"queries — the load run left no usable rows")
+        return failures
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    served = flatten(baseline.get("results", {}))
+    gated = False
+    for q in ("p50_ms", "p95_ms"):
+        b = served.get(f"served.{q}")
+        if not isinstance(b, (int, float)) or b <= 0:
+            continue
+        gated = True
+        c = agg[q]
+        ok = c <= b * ratio
+        print(f"[feed] {'OK' if ok else 'FAIL':>4s}  served.{q}: "
+              f"baseline={b} candidate={c} (bound {ratio:g}x)")
+        if not ok:
+            failures.append(f"feed: served {q}={c} exceeds {ratio:g}x "
+                            f"the baseline {b}")
+    if not gated:
+        failures.append(f"feed: baseline {baseline_path} has no "
+                        f"positive served.p50_ms/p95_ms to gate against")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", action="append", default=[],
@@ -126,6 +214,16 @@ def main(argv=None) -> int:
     ap.add_argument("--candidate", default=None)
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max fractional regression (default 0.25)")
+    ap.add_argument("--from-feed", default=None, metavar="FEED.jsonl",
+                    help="gate served p50/p95 aggregated from this "
+                         "metrics.jsonl feed (stdlib parsing, no "
+                         "PYTHONPATH needed)")
+    ap.add_argument("--feed-baseline", default="BENCH_serving.json",
+                    help="baseline JSON whose results.served block the "
+                         "feed is gated against")
+    ap.add_argument("--feed-ratio", type=float, default=3.0,
+                    help="max served-latency ratio vs baseline "
+                         "(cross-machine sanity bound, default 3.0)")
     args = ap.parse_args(argv)
     pairs = []
     if args.baseline or args.candidate:
@@ -136,13 +234,18 @@ def main(argv=None) -> int:
         if "=" not in p:
             ap.error(f"--pair wants BASELINE=CANDIDATE, got {p!r}")
         pairs.append(tuple(p.split("=", 1)))
-    if not pairs:
-        ap.error("nothing to compare — pass --pair or "
-                 "--baseline/--candidate")
+    if not pairs and args.from_feed is None:
+        ap.error("nothing to compare — pass --pair, "
+                 "--baseline/--candidate, or --from-feed")
     if not 0 < args.threshold < 1:
         ap.error("--threshold must be in (0, 1)")
+    if args.feed_ratio <= 1.0:
+        ap.error("--feed-ratio must be > 1")
 
     failures = []
+    if args.from_feed is not None:
+        failures.extend(check_feed(args.from_feed, args.feed_baseline,
+                                   args.feed_ratio))
     for base_path, cand_path in pairs:
         label = base_path.rsplit("/", 1)[-1]
         with open(base_path) as f:

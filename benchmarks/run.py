@@ -12,7 +12,7 @@ import sys
 def main() -> None:
     from benchmarks import build_bench, client_bench, compaction_bench, \
         fm_bench, kernel_bench, paper_tables, plane_bench, roofline, \
-        table_bench, wal_bench
+        serving_bench, table_bench, wal_bench
 
     benches = [
         ("table1_preprocess_build", paper_tables.bench_build_table1),
@@ -31,6 +31,7 @@ def main() -> None:
         ("wal_group_commit", wal_bench.bench_wal),
         ("staged_build", build_bench.bench_build),
         ("plane_swarm", plane_bench.bench_plane),
+        ("serving_observability", serving_bench.bench_serving),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

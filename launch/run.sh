@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Tuned production launcher for the serving workload.
+#
+# Applies the launch-time half of the tuning story — the knobs a Python
+# process cannot apply to itself — then execs serve.py with the --tuned
+# env preset (docs/observability.md documents every knob):
+#
+#   * LD_PRELOAD tcmalloc when present: thread-cached mallocs beat glibc
+#     under the scheduler's multi-threaded dispatch fan-out;
+#   * TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD: silence tcmalloc's stderr
+#     report for the large build-time array allocations;
+#   * TF_CPP_MIN_LOG_LEVEL=4: fully quiet TF/XLA logging;
+#   * XLA_FLAGS host-device count (HOST_DEVICES=N): multi-device scan
+#     paths on a CPU-only box — set BEFORE python starts, so it always
+#     beats the jax import.
+#
+# Usage (any serve.py flag passes through):
+#   launch/run.sh --root /data/sa --table dna --queries 100000
+#   HOST_DEVICES=4 launch/run.sh --root /data/sa --tablets 2
+set -euo pipefail
+
+# repo root = one level above this script: run from anywhere
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# tcmalloc, when the box has it (Debian/Ubuntu package paths first,
+# then whatever ldconfig knows) — skipped silently when absent
+if [ -z "${LD_PRELOAD:-}" ]; then
+  for so in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+            /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+            "$(ldconfig -p 2>/dev/null | awk '/libtcmalloc(_minimal)?\.so/ {print $NF; exit}')"; do
+    if [ -n "$so" ] && [ -e "$so" ]; then
+      export LD_PRELOAD="$so"
+      break
+    fi
+  done
+fi
+
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# optional: force N XLA host devices (the multi-device scan paths) —
+# serve.py --host-devices does the same, but env set here also covers
+# any jax import that might precede flag parsing in custom entrypoints
+if [ -n "${HOST_DEVICES:-}" ]; then
+  export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=${HOST_DEVICES}"
+fi
+
+exec python -m repro.launch.serve --tuned "$@"

@@ -43,6 +43,7 @@ import numpy as np
 from repro.api.catalog import Catalog
 from repro.api.table import SuffixTable
 from repro.core.planner import ScanOutcome
+from repro.serving.trace import Tracer
 
 QUERY_KINDS = ("count", "contains", "locate", "scan")
 
@@ -307,6 +308,9 @@ class QueryScheduler:
         self._window_current_ms = self.window_ms    # exported in stats
         self._busy = 0                 # waves executing right now
         self.stats = SchedulerStats()
+        # span histograms (stats_snapshot()["latency"]): coalesce_wait,
+        # admission, execute — docs/observability.md defines each
+        self.tracer = Tracer()
         self._cv = threading.Condition()
         # one lock PER TABLE OBJECT serializes that table's scans and
         # client-side writes: the worker thread draining windowed waves
@@ -480,13 +484,17 @@ class QueryScheduler:
 
     def stats_snapshot(self) -> dict:
         """``SchedulerStats.as_dict()`` plus the adaptive window's live
-        state: ``window_ms_current`` (what the next drain will wait) and
-        ``ewma_gap_ms`` (the smoothed inter-arrival gap, ``None`` before
-        two submits) — schema in docs/client_api.md."""
+        state — ``window_ms_current`` (what the next drain will wait)
+        and ``ewma_gap_ms`` (the smoothed inter-arrival gap, ``None``
+        before two submits) — plus ``latency``: the scheduler tracer's
+        span histograms (``coalesce_wait`` / ``admission`` /
+        ``execute``) — schema in docs/client_api.md and
+        docs/observability.md."""
         with self._cv:
             d = self.stats.as_dict()
             d["window_ms_current"] = self._window_current_ms
             d["ewma_gap_ms"] = self._ewma_gap_ms
+        d["latency"] = self.tracer.snapshot()
         return d
 
     # -- execution core ------------------------------------------------------
@@ -516,6 +524,7 @@ class QueryScheduler:
             self._fail(plist, f"{type(e).__name__}: {e}",
                        time.perf_counter())
             return
+        tr = self.tracer
         with self._lock_for(table):
             # deadlines are judged HERE, lock in hand: time queued behind
             # earlier groups or a long client-side write counts against
@@ -534,6 +543,7 @@ class QueryScheduler:
                         f"{(now - p.t_submit) * 1e3:.2f}ms of {dl}ms budget",
                         wait_ms=(now - p.t_submit) * 1e3))
                 else:
+                    tr.record("coalesce_wait", (now - p.t_submit) * 1e3)
                     live.append(p)
             # admission: a metered table (the serving-plane router) may
             # shed per tenant BEFORE any work is dispatched — shed is a
@@ -541,17 +551,18 @@ class QueryScheduler:
             admit = getattr(table, "admit", None)
             if admit is not None and live:
                 admitted = []
-                for p in live:
-                    if admit(p.query.tenant, p.query.num_patterns):
-                        admitted.append(p)
-                    else:
-                        with self._cv:
-                            self.stats.shed += 1
-                        p.future._set(_error_result(
-                            p.query,
-                            f"OVERLOADED: tenant "
-                            f"{p.query.tenant!r} is over quota",
-                            wait_ms=(now - p.t_submit) * 1e3))
+                with tr.span("admission"):
+                    for p in live:
+                        if admit(p.query.tenant, p.query.num_patterns):
+                            admitted.append(p)
+                        else:
+                            with self._cv:
+                                self.stats.shed += 1
+                            p.future._set(_error_result(
+                                p.query,
+                                f"OVERLOADED: tenant "
+                                f"{p.query.tenant!r} is over quota",
+                                wait_ms=(now - p.t_submit) * 1e3))
                 live = admitted
             if not live:
                 return
@@ -561,16 +572,18 @@ class QueryScheduler:
                 for p in live:
                     spans.append((n, n + p.query.num_patterns))
                     n += p.query.num_patterns
-                if key[1] == "str":
-                    pats: list[str] = []
-                    for p in live:
-                        pats.extend(p.query.patterns)
-                    out = table.scan(pats, top_k=top_k)
-                else:
-                    codes = np.concatenate([p.query.codes for p in live])
-                    lens = np.concatenate(
-                        [np.asarray(p.query.lens) for p in live])
-                    out = table.scan_batch(codes, lens, top_k=top_k)
+                with tr.span("execute"):
+                    if key[1] == "str":
+                        pats: list[str] = []
+                        for p in live:
+                            pats.extend(p.query.patterns)
+                        out = table.scan(pats, top_k=top_k)
+                    else:
+                        codes = np.concatenate(
+                            [p.query.codes for p in live])
+                        lens = np.concatenate(
+                            [np.asarray(p.query.lens) for p in live])
+                        out = table.scan_batch(codes, lens, top_k=top_k)
             except Exception as e:  # noqa: BLE001
                 self._fail(live, f"{type(e).__name__}: {e}", now)
                 return

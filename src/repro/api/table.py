@@ -58,6 +58,8 @@ from repro.core.build_pipeline import BuildStats, chunk_rows_for_budget, \
     in_memory_build_stats, staged_suffix_array
 from repro.core.planner import ScanOutcome, ScanPlanner, TopKCache
 from repro.core.query import MatchResult
+from repro.serving.metrics import MetricsEmitter, table_record
+from repro.serving.trace import Tracer
 from repro.core.suffix_array import build_suffix_array
 from repro.core.tablet import TabletStore, build_tablet_store, \
     store_from_arrays
@@ -144,6 +146,10 @@ class SuffixTable:
         self.fm = None
         self.runs: list[Run] = []
         self._codes = np.asarray(codes)
+        # span histograms (stats()["latency"]): created before the
+        # planner so freeze/compaction rebinds keep one shared tracer
+        self.tracer = Tracer()
+        self._metrics: Optional[MetricsEmitter] = None
 
         if _store is not None:                       # from_store: adopt as-is
             self.mesh = _planner.mesh if _planner is not None else None
@@ -151,7 +157,9 @@ class SuffixTable:
             self.planner = _planner or ScanPlanner(
                 _store, cache_size=cache_size,
                 capacity_factor=capacity_factor,
-                routed_min_batch=routed_min_batch)
+                routed_min_batch=routed_min_batch, tracer=self.tracer)
+            if _planner is not None:
+                self.tracer = _planner.tracer        # adopt its histograms
         elif _fm is not None:                        # open(): frozen tier
             self.mesh = None
             self._attach_frozen(_fm)
@@ -422,7 +430,8 @@ class SuffixTable:
             self.planner = ScanPlanner(
                 self.store, mesh=self.mesh, cache_size=self.cache_size,
                 capacity_factor=self.capacity_factor,
-                routed_min_batch=self.routed_min_batch)
+                routed_min_batch=self.routed_min_batch,
+                tracer=self.tracer)
         else:
             planner.rebind(self.store)          # also drops any FM binding
         self.fm = None
@@ -452,7 +461,8 @@ class SuffixTable:
             self.planner = ScanPlanner(
                 self.store, cache_size=self.cache_size,
                 capacity_factor=self.capacity_factor,
-                routed_min_batch=self.routed_min_batch, fm=fm)
+                routed_min_batch=self.routed_min_batch, fm=fm,
+                tracer=self.tracer)
         else:
             planner.rebind(self.store, fm=fm)
 
@@ -512,6 +522,11 @@ class SuffixTable:
           ``bases_per_s`` — the :class:`~repro.core.build_pipeline.
           BuildStats` schema, persisted with the table
           (docs/build_pipeline.md);
+        * ``latency`` — rolling span histograms from the table's
+          :class:`~repro.serving.trace.Tracer` (``encode`` /
+          ``dispatch`` / ``merge`` / ``total`` plus the planner's
+          ``dispatch_*`` modes), each ``{p50_ms, p95_ms, p99_ms, n,
+          total, sum_ms}`` — docs/observability.md defines every span;
         * ``wal`` — durability: ``enabled``, ``seq`` (last append's
           commit sequence), ``log`` (appends/fsyncs/seals counters, or
           ``None`` with no log), and ``recovery`` — ``None`` on a clean
@@ -542,6 +557,7 @@ class SuffixTable:
             "build": (self._build.to_dict() if self._build is not None
                       else None),
             "planner": self.planner.stats.as_dict(),
+            "latency": self.tracer.snapshot(),
             "wal": {
                 "enabled": self._wal is not None,
                 "seq": self._wal_seq,
@@ -719,6 +735,8 @@ class SuffixTable:
                 first_pos=np.full(0, -1, np.int64),
                 positions=(np.full((0, top_k), -1, np.int64)
                            if top_k else None))
+        tr = self.tracer
+        t_all = time.monotonic_ns()
         patt_np = np.asarray(patt)
         bucket = 1 << (B - 1).bit_length() if B > 1 else 1
         if bucket != B:
@@ -727,23 +745,31 @@ class SuffixTable:
                 [patt_np, np.repeat(patt_np[:1], reps, axis=0)])
             plen_np = np.concatenate(
                 [plen_np, np.repeat(plen_np[:1], reps)])
-        merged, _tres, delta, base_count = self._scan_tiers(
-            jnp.asarray(patt_np), jnp.asarray(plen_np), n_real=B)
-        count = np.asarray(merged.count).astype(np.int64)[:B]
-        base_rank = np.asarray(merged.first_rank)[:B]
-        first_pos = self._base_min_positions(base_count, base_rank)
-        positions = (np.full((B, top_k), -1, np.int64) if top_k else None)
-        for i in range(B):
-            g = delta[i] if delta is not None else np.zeros((0,), np.int64)
-            if g.size and (first_pos[i] < 0 or g[0] < first_pos[i]):
-                first_pos[i] = int(g[0])
-            if top_k:
-                run = self._base_slice(base_count, base_rank, i)
-                cand = np.concatenate([run, g])
-                if cand.size > top_k:
-                    cand = np.partition(cand, top_k - 1)[:top_k]
-                cand.sort()
-                positions[i, :cand.size] = cand
+        # "dispatch" covers the fused launch; any async device wait is
+        # forced (and therefore timed) by the host conversions inside
+        # _scan_tiers, so "merge" below is pure host-side reduction
+        with tr.span("dispatch"):
+            merged, _tres, delta, base_count = self._scan_tiers(
+                jnp.asarray(patt_np), jnp.asarray(plen_np), n_real=B)
+        with tr.span("merge"):
+            count = np.asarray(merged.count).astype(np.int64)[:B]
+            base_rank = np.asarray(merged.first_rank)[:B]
+            first_pos = self._base_min_positions(base_count, base_rank)
+            positions = (np.full((B, top_k), -1, np.int64)
+                         if top_k else None)
+            for i in range(B):
+                g = (delta[i] if delta is not None
+                     else np.zeros((0,), np.int64))
+                if g.size and (first_pos[i] < 0 or g[0] < first_pos[i]):
+                    first_pos[i] = int(g[0])
+                if top_k:
+                    run = self._base_slice(base_count, base_rank, i)
+                    cand = np.concatenate([run, g])
+                    if cand.size > top_k:
+                        cand = np.partition(cand, top_k - 1)[:top_k]
+                    cand.sort()
+                    positions[i, :cand.size] = cand
+        tr.record("total", (time.monotonic_ns() - t_all) / 1e6)
         return ScanOutcome(found=count > 0, count=count,
                            first_pos=first_pos, positions=positions)
 
@@ -771,7 +797,9 @@ class SuffixTable:
             else:
                 miss_idx.append(i)
         if miss_idx:
-            patt, plen = self.planner.encode([patterns[i] for i in miss_idx])
+            with self.tracer.span("encode"):
+                patt, plen = self.planner.encode(
+                    [patterns[i] for i in miss_idx])
             sub = self.scan_batch(patt, plen, top_k=top_k)
             for j, i in enumerate(miss_idx):
                 count[i] = sub.count[j]
@@ -1073,10 +1101,36 @@ class SuffixTable:
                 "SuffixTable.create(...) to get durable storage")
         self._persist()
 
+    def start_metrics(self, path: str, interval_s: float = 1.0,
+                      name: Optional[str] = None) -> None:
+        """Stream this table's full :meth:`stats` tree into a
+        ``metrics.jsonl`` feed — the SAME feed schema the serving
+        plane's workers and routers append to, so ``serve.py
+        --dump-stats`` (and ``check_regression.py --from-feed``)
+        aggregate one schema whether serving is in-process or
+        multi-process (docs/observability.md).  Each row is
+        ``metrics.table_record(name, stats())``; ``name`` overrides the
+        row identity for anonymous in-memory tables (``self.name`` is
+        the default).  Idempotent — a second call restarts the emitter
+        on the new path/interval."""
+        self.stop_metrics()
+        row_name = name if name is not None else self.name
+        self._metrics = MetricsEmitter(
+            path, lambda: table_record(row_name, self.stats()),
+            interval_s=interval_s)
+
+    def stop_metrics(self) -> None:
+        """Stop the feed emitter (writes one final row)."""
+        if self._metrics is not None:
+            self._metrics.stop()
+            self._metrics = None
+
     def close(self) -> None:
-        """Release the commit-log file handle.  Reads keep working; a
-        later :meth:`append` raises instead of silently losing
-        durability (reopen the table to resume writing)."""
+        """Release the commit-log file handle and stop the metrics
+        emitter.  Reads keep working; a later :meth:`append` raises
+        instead of silently losing durability (reopen the table to
+        resume writing)."""
+        self.stop_metrics()
         if self._wal is not None:
             self._wal.close()
 

@@ -58,6 +58,7 @@ from repro.core import codec
 from repro.core import query as Q
 from repro.core.query import MatchResult
 from repro.core.tablet import TabletStore
+from repro.serving.trace import Tracer
 
 MODE_SINGLE = "single"
 MODE_BROADCAST = "broadcast"
@@ -260,7 +261,8 @@ class ScanPlanner:
     def __init__(self, store: TabletStore, *, mesh=None,
                  axis_name: str = "tablets", capacity_factor: float = 2.0,
                  routed_min_batch: int = 64, cache_size: int = 4096,
-                 max_pattern_len: Optional[int] = None, fm=None):
+                 max_pattern_len: Optional[int] = None, fm=None,
+                 tracer: Optional[Tracer] = None):
         self.store = store
         self.mesh = mesh if fm is None else None   # frozen = single-replica
         self.fm = fm
@@ -278,6 +280,9 @@ class ScanPlanner:
         self.cache_size = int(cache_size)
         self.max_pattern_len = int(max_pattern_len or store.max_query_len)
         self.stats = PlannerStats()
+        # shared with the owning table so span histograms survive
+        # rebind/recreation across freeze and compaction
+        self.tracer = tracer if tracer is not None else Tracer()
         self._cache = TopKCache(self.cache_size)
         self._sa_host: Optional[np.ndarray] = None
         # executors are built lazily and injectable for tests: each maps
@@ -469,7 +474,11 @@ class ScanPlanner:
             z = jnp.zeros((0,), jnp.int32)
             return MatchResult(found=z.astype(bool), count=z,
                                first_rank=z, first_pos=z)
-        res = self._executor(chosen)(patt, plen)
+        # NOTE jax dispatch is async: this span measures enqueue + any
+        # host work the executor does; device wait is paid (and traced)
+        # by whichever downstream span first forces the result
+        with self.tracer.span("dispatch_" + chosen):
+            res = self._executor(chosen)(patt, plen)
         if chosen != MODE_ROUTED or not retry:
             return res
 
@@ -541,14 +550,16 @@ class ScanPlanner:
         if chosen == MODE_SINGLE:
             self._account(chosen, B, n_real)
             self.stats.tier_reads["base"] += 1
-            merged, _base, tiers = ops.fused_single(
-                self.store, tierset.stack, patt, plen)
+            with self.tracer.span("dispatch_fused"):
+                merged, _base, tiers = ops.fused_single(
+                    self.store, tierset.stack, patt, plen)
         else:
             # mesh base scan keeps its own dispatch (and sentinel
             # retries); scan_encoded does the accounting for it
             base = self.scan_encoded(patt, plen, mode=chosen, retry=retry,
                                      n_real=n_real)
-            tiers = ops.fused_tiers(tierset.stack, patt, plen)
+            with self.tracer.span("dispatch_fused"):
+                tiers = ops.fused_tiers(tierset.stack, patt, plen)
             from repro.kernels.tier_scan import merge_tier_results
             merged = merge_tier_results(
                 MatchResult(found=jnp.asarray(base.found),

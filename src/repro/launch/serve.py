@@ -32,12 +32,16 @@ DIR, later runs re-open it (no rebuild) on any device count.
 
 Launch tuning happens BEFORE the jax import (jax reads the environment
 exactly once): ``--host-devices N`` forces N host platform devices via
-``XLA_FLAGS`` and quiets the XLA banner via ``TF_CPP_MIN_LOG_LEVEL`` —
-so heavy imports live inside :func:`main`, not at module top.
+``XLA_FLAGS``, ``--tuned`` applies the production env preset
+(TF_CPP_MIN_LOG_LEVEL=4, tcmalloc report threshold; ``launch/run.sh``
+adds the LD_PRELOAD half) — so heavy imports live inside :func:`main`,
+not at module top.
 
-``--dump-stats`` is the ``/varz`` path: it aggregates the served
-table's ``metrics.jsonl`` feed (written by tablet workers and routers)
-and exits without ever importing jax.
+``--metrics-interval`` streams the served table's full ``stats()``
+tree into ``root/<table>/metrics.jsonl`` — the same feed tablet
+workers and routers append to.  ``--dump-stats`` is the ``/varz``
+path: it aggregates that feed and exits without ever importing jax
+(docs/observability.md).
 """
 from __future__ import annotations
 
@@ -59,7 +63,8 @@ def _dump_stats(args) -> None:
     agg = aggregate_metrics(path)
     s = agg["summary"]
     print(f"[varz  ] table={args.table} emitters={s['emitters']} "
-          f"workers={s['workers']} tablets={s['tablets']}")
+          f"workers={s['workers']} tablets={s['tablets']} "
+          f"tables={s['tables']}")
     print(f"[varz  ] queries={s['queries']} rpcs={s['rpcs']} "
           f"shed_worker={s['shed_worker']} shed_quota={s['shed_quota']} "
           f"hedge_fired={s['hedge_fired']} hedge_wins={s['hedge_wins']} "
@@ -76,6 +81,17 @@ def _dump_stats(args) -> None:
                   f"queries={rec.get('queries')} shed={rec.get('shed')} "
                   f"p50={rec.get('p50_ms')} p95={rec.get('p95_ms')} "
                   f"crc={rec.get('text_crc')}")
+        elif role == "table":
+            # in-process emitter (SuffixTable.start_metrics): same row
+            # schema, full stats() tree under "stats"
+            tiers = (rec.get("stats") or {}).get("tiers") or {}
+            print(f"[varz  ] table-proc {rec.get('table')} "
+                  f"pid={rec.get('pid')} queries={rec.get('queries')} "
+                  f"p50={rec.get('p50_ms')} p95={rec.get('p95_ms')} "
+                  f"p99={rec.get('p99_ms')} "
+                  f"base={tiers.get('base_rows')} "
+                  f"runs={tiers.get('run_count')} "
+                  f"frozen={tiers.get('frozen')}")
         else:
             print(f"[varz  ] router pid={rec.get('pid')} "
                   f"rpcs={rec.get('rpcs')} "
@@ -83,6 +99,16 @@ def _dump_stats(args) -> None:
                   f"{rec.get('hedge_wins')} "
                   f"failovers={rec.get('failovers')} "
                   f"quota_shed={rec.get('quota_shed')}")
+
+
+def _malloc_in_use() -> str:
+    """Which allocator this process actually mapped ("tcmalloc" /
+    "libc" / "unknown") — LD_PRELOAD can lie; /proc/self/maps cannot."""
+    try:
+        with open("/proc/self/maps") as f:
+            return "tcmalloc" if "tcmalloc" in f.read() else "libc"
+    except OSError:
+        return "unknown"
 
 
 def main(argv=None):
@@ -139,6 +165,20 @@ def main(argv=None):
                     help="table name under --root")
     ap.add_argument("--aux-table", default="dna_aux",
                     help="second table for the multi-table demo")
+    ap.add_argument("--tuned", action="store_true",
+                    help="production env preset, applied BEFORE the jax "
+                         "import (docs/observability.md): fully quiet TF/"
+                         "XLA logging (TF_CPP_MIN_LOG_LEVEL=4), a high "
+                         "tcmalloc large-alloc report threshold, and a "
+                         "report of the malloc actually linked "
+                         "(LD_PRELOADing tcmalloc itself is a launch-"
+                         "time knob — use launch/run.sh)")
+    ap.add_argument("--metrics-interval", type=float, default=1.0,
+                    help="stream the table's full stats() tree into "
+                         "root/<table>/metrics.jsonl every this many "
+                         "seconds — the same feed plane workers write, "
+                         "aggregated by --dump-stats (0 = one final row "
+                         "on close, negative = no feed; needs --root)")
     ap.add_argument("--host-devices", type=int, default=None,
                     help="force this many XLA host-platform devices "
                          "(sets XLA_FLAGS before the jax import; a "
@@ -163,7 +203,25 @@ def main(argv=None):
 
     # tuned launch path: jax reads the environment ONCE at import, so
     # these must land before any jax import in this process
-    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL",
+                          "4" if args.tuned else "2")
+    if args.tuned:
+        if "jax" in sys.modules:
+            print("[tune  ] warning: jax already imported — the --tuned "
+                  "env preset cannot take effect in this process "
+                  "(launch through launch/run.sh instead)")
+        os.environ.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD",
+                              "60000000000")
+        malloc = _malloc_in_use()
+        print(f"[tune  ] preset: TF_CPP_MIN_LOG_LEVEL="
+              f"{os.environ['TF_CPP_MIN_LOG_LEVEL']} "
+              f"TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="
+              f"{os.environ['TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD']} "
+              f"malloc={malloc}")
+        if malloc != "tcmalloc":
+            print("[tune  ] note: tcmalloc is not linked — LD_PRELOAD "
+                  "is a launch-time knob the interpreter cannot apply "
+                  "to itself; start via launch/run.sh to get it")
     if args.host_devices is not None:
         if "jax" in sys.modules:
             print(f"[tune  ] warning: jax already imported — "
@@ -244,6 +302,15 @@ def main(argv=None):
         rb = table.stats()["tiers"]["resident_bytes"]
         print(f"[freeze] base tier -> FM-index in {time.time() - t1:.1f}s "
               f"(fm={rb['fm']}B, base_sa={rb['base_sa']}B)")
+
+    # stream the in-process stats() tree into the SAME metrics.jsonl
+    # feed plane workers use: --dump-stats (and check_regression.py
+    # --from-feed) then aggregate one schema for every serving mode
+    if args.root is not None and args.metrics_interval >= 0:
+        mpath = os.path.join(args.root, args.table, "metrics.jsonl")
+        table.start_metrics(mpath, interval_s=args.metrics_interval)
+        print(f"[feed  ] stats() -> {mpath} "
+              f"every {args.metrics_interval}s")
 
     # clamp to the table's pattern cap: run_workload validates up front
     max_pattern = min(args.max_pattern, table.max_query_len)
@@ -384,6 +451,14 @@ def main(argv=None):
           f"pad_slots={pl['pad_slots']} modes={pl['mode_counts']} "
           f"retried={pl['retried_overflow']}/{pl['retried_saturated']}"
           f"/{pl['retried_inexact_rank']}")
+    lat = st["latency"]
+    if lat:
+        spans = " ".join(
+            f"{k}={v['p50_ms']}/{v['p95_ms']}/{v['p99_ms']}"
+            for k, v in lat.items())
+        print(f"[trace ] span p50/p95/p99 ms: {spans}")
+    else:
+        print("[trace ] no spans recorded")
     w = st["wal"]
     if w["enabled"]:
         print(f"[wal   ] seq={w['seq']} appends={w['log']['appends']} "

@@ -1,11 +1,16 @@
 """Periodic JSON-lines metrics feed for the serving plane (numpy-free).
 
 Every tablet worker appends one JSON line per interval to the served
-table's ``root/<name>/metrics.jsonl`` — p50/p95 service latency, queue
-depth, shed count, WAL replay/fsync state — and the router appends its
-own lines (hedge wins, failovers, per-tenant shed).  ``serve.py
+table's ``root/<name>/metrics.jsonl`` — p50/p95/p99 service latency,
+queue depth, shed count, WAL replay/fsync state — and the router
+appends its own lines (hedge wins, failovers, per-tenant shed).
+In-process tables join the same feed through
+``SuffixTable.start_metrics`` (rows built by :func:`table_record`, the
+full ``stats()`` tree under ``"stats"``), so one schema covers
+single-process, scheduled, and plane serving.  ``serve.py
 --dump-stats`` aggregates the file into a ``/varz``-style snapshot:
-the latest line per emitter plus fleet-wide totals.
+the latest line per emitter plus fleet-wide totals
+(docs/observability.md).
 
 Appends are single ``os.write`` calls on an ``O_APPEND`` fd, so
 concurrent workers interleave whole lines, never fragments (each line
@@ -38,13 +43,13 @@ class LatencyWindow:
         with self._lock:
             data = sorted(self._window)
         if not data:
-            return {"p50_ms": 0.0, "p95_ms": 0.0, "n": 0}
+            return {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0, "n": 0}
 
         def q(frac: float) -> float:
             return data[min(len(data) - 1, int(frac * len(data)))]
 
         return {"p50_ms": round(q(0.50), 4), "p95_ms": round(q(0.95), 4),
-                "n": len(data)}
+                "p99_ms": round(q(0.99), 4), "n": len(data)}
 
 
 def append_line(path: str, record: dict) -> None:
@@ -95,6 +100,28 @@ class MetricsEmitter:
         self.emit()                # final line: the worker's last word
 
 
+def table_record(name: Optional[str], stats: dict) -> dict:
+    """One feed row for an in-process table — the SAME schema plane
+    workers emit: ``role`` + identity + top-level ``queries`` /
+    ``p50_ms`` / ``p95_ms`` / ``p99_ms`` scalars the aggregator sums,
+    with the full ``SuffixTable.stats()`` tree (tiers/cache/planner/
+    build/wal/latency) riding under ``"stats"`` for drill-down.  The
+    latency scalars come from the ``"total"`` span histogram (end-to-end
+    ``scan_batch`` time); docs/observability.md documents the row."""
+    latency = stats.get("latency") or {}
+    total = latency.get("total") or {}
+    return {
+        "role": "table",
+        "table": name,
+        "pid": os.getpid(),
+        "queries": int((stats.get("planner") or {}).get("queries") or 0),
+        "p50_ms": float(total.get("p50_ms") or 0.0),
+        "p95_ms": float(total.get("p95_ms") or 0.0),
+        "p99_ms": float(total.get("p99_ms") or 0.0),
+        "stats": stats,
+    }
+
+
 def read_lines(path: str) -> list[dict]:
     """Every parseable metrics line (torn/corrupt lines are skipped —
     the feed is observability, not a source of truth)."""
@@ -116,33 +143,38 @@ def read_lines(path: str) -> list[dict]:
 def aggregate_metrics(path: str) -> dict:
     """The ``/varz`` snapshot ``serve.py --dump-stats`` prints.
 
-    Groups lines by emitter (``role``/``tablet``/``replica``/``pid``),
-    keeps each emitter's LATEST line, and sums the countable fields
-    across workers: queries served, RPCs, sheds, hedge wins, failovers,
-    WAL records replayed.  Latencies aggregate as the worst (max) p95
-    and the median of p50s — a fleet summary, not a merged histogram.
+    Groups lines by emitter (``role``/``tablet``/``replica``/``pid``,
+    plus ``table`` for in-process ``role: "table"`` rows), keeps each
+    emitter's LATEST line, and sums the countable fields across
+    emitters: queries served, RPCs, sheds, hedge wins, failovers, WAL
+    records replayed.  Latencies aggregate as the worst (max) p95 and
+    the median of p50s over every query-serving emitter (workers AND
+    in-process tables) — a fleet summary, not a merged histogram.
     """
     lines = read_lines(path)
     latest: dict[tuple, dict] = {}
     for rec in lines:
         key = (rec.get("role", "worker"), rec.get("tablet"),
-               rec.get("replica"), rec.get("pid"))
+               rec.get("replica"), rec.get("pid"), rec.get("table"))
         cur = latest.get(key)
         if cur is None or rec.get("ts", 0) >= cur.get("ts", 0):
             latest[key] = rec
     workers = [r for r in latest.values()
                if r.get("role", "worker") == "worker"]
     routers = [r for r in latest.values() if r.get("role") == "router"]
+    tables = [r for r in latest.values() if r.get("role") == "table"]
+    serving = workers + tables     # everything that answers queries
 
     def total(records: list[dict], field: str) -> int:
         return int(sum(r.get(field) or 0 for r in records))
 
-    p50s = sorted(r.get("p50_ms", 0.0) for r in workers)
+    p50s = sorted(r.get("p50_ms", 0.0) for r in serving)
     summary = {
         "emitters": len(latest),
         "workers": len(workers),
+        "tables": len(tables),
         "tablets": len({r.get("tablet") for r in workers}),
-        "queries": total(workers, "queries"),
+        "queries": total(serving, "queries"),
         "rpcs": total(workers, "rpcs"),
         "shed_worker": total(workers, "shed"),
         "shed_quota": total(routers, "quota_shed"),
@@ -152,11 +184,12 @@ def aggregate_metrics(path: str) -> dict:
         "wal_records_replayed": total(workers, "wal_records_replayed"),
         "queue_depth": total(workers, "queue_depth"),
         "p50_ms_median": (p50s[len(p50s) // 2] if p50s else 0.0),
-        "p95_ms_max": max((r.get("p95_ms", 0.0) for r in workers),
+        "p95_ms_max": max((r.get("p95_ms", 0.0) for r in serving),
                           default=0.0),
     }
     return {"summary": summary,
             "latest": sorted(latest.values(),
                              key=lambda r: (str(r.get("role", "worker")),
+                                            str(r.get("table") or ""),
                                             r.get("tablet") or 0,
                                             r.get("replica") or 0))}

@@ -44,6 +44,7 @@ import numpy as np
 from repro.serving import rpc
 from repro.serving.metrics import LatencyWindow, MetricsEmitter
 from repro.serving.tablet_server import encode_pattern_rows
+from repro.serving.trace import Tracer
 
 
 class OverloadedError(RuntimeError):
@@ -142,6 +143,10 @@ class TabletRouter:
         self.quota_shed = 0
         self.rpcs = 0
         self._latency = LatencyWindow()
+        # span histograms (stats()["latency"]): dispatch_remote (one
+        # logical tablet read: hedge + failover walk) and hedge_wait
+        # (hedge fired -> first success) — docs/observability.md
+        self.tracer = Tracer()
         self._quotas: dict[str, TokenBucket] = {}
         self.emitter = None
         if metrics_path is not None:
@@ -183,7 +188,12 @@ class TabletRouter:
     def _call_tablet(self, tid: int, msg: dict) -> dict:
         """One logical tablet read: hedge across replicas, fail over on
         transport errors and worker sheds, raise only when every replica
-        is gone (RpcError) or shedding (OverloadedError)."""
+        is gone (RpcError) or shedding (OverloadedError).  The whole
+        walk is one ``dispatch_remote`` span (recorded on error too)."""
+        with self.tracer.span("dispatch_remote"):
+            return self._call_tablet_inner(tid, msg)
+
+    def _call_tablet_inner(self, tid: int, msg: dict) -> dict:
         with self._stats_lock:
             self.rpcs += 1
         clients = self._clients[tid]
@@ -224,21 +234,22 @@ class TabletRouter:
             return None                    # fast failure: no hedge needed
         with self._stats_lock:
             self.hedge_fired += 1
-        backup = self._hedge.submit(self._try_replica, tid, 1, msg)
-        pending = {primary, backup}
-        while pending:
-            done, pending = cf.wait(pending,
-                                    return_when=cf.FIRST_COMPLETED)
-            for fut in done:
-                try:
-                    reply = fut.result()
-                except (_Overloaded, rpc.RpcError):
-                    continue
-                if fut is backup:
-                    with self._stats_lock:
-                        self.hedge_wins += 1
-                return reply               # loser's reply is discarded
-        return None
+        with self.tracer.span("hedge_wait"):
+            backup = self._hedge.submit(self._try_replica, tid, 1, msg)
+            pending = {primary, backup}
+            while pending:
+                done, pending = cf.wait(pending,
+                                        return_when=cf.FIRST_COMPLETED)
+                for fut in done:
+                    try:
+                        reply = fut.result()
+                    except (_Overloaded, rpc.RpcError):
+                        continue
+                    if fut is backup:
+                        with self._stats_lock:
+                            self.hedge_wins += 1
+                    return reply           # loser's reply is discarded
+            return None
 
     # -- routing -------------------------------------------------------------
     def _prefix_cmp(self, row: np.ndarray, length: int,
@@ -384,6 +395,7 @@ class TabletRouter:
                   "quota_shed": self.quota_shed,
                   "hedge_enabled": self.hedge_enabled}
         st.update(self._latency.quantiles())
+        st["latency"] = self.tracer.snapshot()
         return st
 
     def ping_all(self, *, timeout: float = 1.0) -> list[list[bool]]:

@@ -55,6 +55,7 @@ import numpy as np
 from repro.api.wal import read_segment
 from repro.serving import rpc
 from repro.serving.metrics import LatencyWindow, MetricsEmitter
+from repro.serving.trace import Tracer
 
 _DNA = {c: i for i, c in enumerate("ACGT")}
 
@@ -394,6 +395,9 @@ class TabletWorker:
         # like a single-accelerator planner dispatch queue
         self._device_lock = threading.Lock()
         self._latency = LatencyWindow()
+        # per-op span histograms (stats()["latency"]): scan / locate /
+        # stats service time, same snapshot schema as every other tier
+        self.tracer = Tracer()
         self._queries = 0
         self._rpcs = 0
         self._t0 = time.time()
@@ -406,9 +410,10 @@ class TabletWorker:
             self.emitter = MetricsEmitter(metrics_path, self.stats,
                                           interval_s=metrics_interval_s)
 
-    def _observe(self, _op: str, service_ms: float, shed: bool) -> None:
+    def _observe(self, op: str, service_ms: float, shed: bool) -> None:
         if not shed:
             self._latency.record(service_ms)
+            self.tracer.record(str(op), service_ms)
 
     def _device_execute(self, n_patterns: int):
         """The device model: serialized execution, optional per-pattern
@@ -433,6 +438,7 @@ class TabletWorker:
                    "queue_depth": self.server.queue_depth,
                    "max_inflight": self.server.max_inflight,
                    "uptime_s": round(time.time() - self._t0, 1)})
+        st["latency"] = self.tracer.snapshot()
         return st
 
     # -- request handling -----------------------------------------------------

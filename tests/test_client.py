@@ -368,7 +368,13 @@ def test_stats_schema_is_stable_and_documented():
     table.append(codec.random_dna(250, seed=13))   # triggers a seal
     s = table.stats()
     assert set(s) == {"name", "version", "is_dna", "max_query_len",
-                      "tiers", "cache", "build", "planner", "wal"}
+                      "tiers", "cache", "build", "planner", "wal",
+                      "latency"}
+    # latency = tracing-span histograms (docs/observability.md); every
+    # span exposes the same quantile schema
+    assert "total" in s["latency"]
+    assert set(s["latency"]["total"]) == {"p50_ms", "p95_ms", "p99_ms",
+                                          "n", "total", "sum_ms"}
     assert set(s["build"]) == {"mode", "n_bases", "rounds", "n_chunks",
                                "chunk_rows", "peak_device_bytes",
                                "spill_bytes", "elapsed_s", "bases_per_s"}

@@ -1,0 +1,112 @@
+"""Docs integrity gate (stdlib only — CI runs it without PYTHONPATH).
+
+Two failure modes, both of which have already happened to every docs
+tree ever written:
+
+* **dead links** — every relative markdown link in ``README.md`` and
+  ``docs/*.md`` must point at a file that exists, and a ``#fragment``
+  must match a real heading in the target (GitHub slug rules);
+* **orphan pages** — every page under ``docs/`` must be reachable from
+  ``docs/index.md`` by following links, else it silently rots.
+
+Exit 0 when clean; exit 1 listing every violation.  Wired into the CI
+lint job (docs/ci.md).
+
+    python tools/check_docs_links.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: drop markdown/backticks, lowercase, strip
+    punctuation, spaces to hyphens."""
+    s = re.sub(r"[`*_]", "", heading.strip()).lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    return {github_slug(h) for h in HEADING_RE.findall(text)}
+
+
+def links_of(path: str) -> list:
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    return LINK_RE.findall(text)
+
+
+def main() -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    pages = [os.path.join(root, "README.md")]
+    docs_dir = os.path.join(root, "docs")
+    pages += sorted(os.path.join(docs_dir, f)
+                    for f in os.listdir(docs_dir) if f.endswith(".md"))
+    errors = []
+    graph = {}                       # abs page -> set of abs md targets
+
+    for page in pages:
+        rel_page = os.path.relpath(page, root)
+        targets = set()
+        for raw in links_of(page):
+            if raw.startswith(EXTERNAL):
+                continue
+            target, _, frag = raw.partition("#")
+            if not target:           # same-page #fragment
+                if frag and github_slug(frag) not in anchors_of(page):
+                    errors.append(f"{rel_page}: dead anchor '#{frag}'")
+                continue
+            dest = os.path.normpath(
+                os.path.join(os.path.dirname(page), target))
+            if not os.path.exists(dest):
+                errors.append(f"{rel_page}: dead link '{raw}'")
+                continue
+            if dest.endswith(".md"):
+                targets.add(dest)
+                if frag and frag not in anchors_of(dest):
+                    errors.append(f"{rel_page}: link '{raw}' — no such "
+                                  f"heading in {os.path.relpath(dest, root)}")
+        graph[page] = targets
+
+    # reachability: BFS over md links from docs/index.md
+    index = os.path.join(docs_dir, "index.md")
+    if not os.path.exists(index):
+        errors.append("docs/index.md is missing — nothing anchors the "
+                      "docs map")
+    else:
+        seen, frontier = {index}, [index]
+        while frontier:
+            page = frontier.pop()
+            for dest in graph.get(page, set()):
+                if dest not in seen:
+                    seen.add(dest)
+                    frontier.append(dest)
+        for page in pages:
+            if page.startswith(docs_dir + os.sep) and page not in seen:
+                errors.append(f"{os.path.relpath(page, root)}: "
+                              f"unreachable from docs/index.md")
+
+    n_links = sum(len(links_of(p)) for p in pages)
+    if errors:
+        print(f"docs link check FAILED ({len(errors)} problems, "
+              f"{len(pages)} pages):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"docs link check OK: {len(pages)} pages, {n_links} links, "
+          f"all docs reachable from docs/index.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
